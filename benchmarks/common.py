@@ -1,0 +1,98 @@
+"""Shared benchmark utilities: the paper's ML workload, timing, reporting."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = Path("results/bench")
+
+
+def timed(fn: Callable[[], Any], *, repeats: int = 3, warmup: int = 1) -> dict:
+    """Median wall time of fn() (block_until_ready'd)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return {"median_s": float(np.median(ts)), "min_s": min(ts), "max_s": max(ts)}
+
+
+def save_rows(name: str, rows: list[dict]) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = RESULTS_DIR / f"{name}.json"
+    out.write_text(json.dumps(rows, indent=1))
+    return out
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]) -> None:
+    print(f"\n== {title} ==")
+    header = " | ".join(f"{c:>18s}" for c in cols)
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        print(" | ".join(f"{_fmt(r.get(c)):>18s}" for c in cols))
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+# ---------------------------------------------------------------------------
+# The paper's ML benchmark (§5): 1-hidden-layer NN over 3D-scan-like images.
+# input pixels distributed across cores; phases: feed forward / combine
+# gradients / model update.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LungNNConfig:
+    n_pixels: int  # 3600 (small) / "full" ~7M in the paper
+    n_hidden: int = 100
+    batch_images: int = 8
+    seed: int = 0
+
+    @property
+    def image_bytes(self) -> int:
+        return self.n_pixels * 4
+
+
+def init_lung_nn(cfg: LungNNConfig):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(cfg.seed))
+    w1 = jax.random.normal(k1, (cfg.n_pixels, cfg.n_hidden), jnp.float32) * 0.01
+    w2 = jax.random.normal(k2, (cfg.n_hidden, 1), jnp.float32) * 0.1
+    return {"w1": w1, "w2": w2}
+
+
+def make_images(cfg: LungNNConfig, n: int):
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    xs = jax.random.normal(key, (n, cfg.n_pixels), jnp.float32)
+    ys = (jnp.sum(xs[:, ::97], axis=-1, keepdims=True) > 0).astype(jnp.float32)
+    return xs, ys
+
+
+def feed_forward(params, x):
+    h = jax.nn.sigmoid(x @ params["w1"])
+    return jax.nn.sigmoid(h @ params["w2"])
+
+
+def loss_fn(params, x, y):
+    p = feed_forward(params, x)
+    return jnp.mean((p - y) ** 2)
+
+
+combine_gradients = jax.grad(loss_fn)
+
+
+def model_update(params, grads, lr=0.1):
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)

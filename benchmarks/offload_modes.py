@@ -1,0 +1,177 @@
+"""Paper Fig 3 analogue: ML benchmark under eager / on-demand / prefetch.
+
+The paper's claim structure this reproduces:
+  * on-demand  <<  eager  <=  prefetch   (end-to-end phase times)
+  * the on-demand penalty comes from *request count*, not per-transfer time
+  * model update is unaffected by the transfer mode (no data movement)
+
+The images live at the paper's ``Host`` kind (outside the device step — on
+this CPU container host-kind placement is the host numpy heap; on TPU it is
+``pinned_host``); the kernel receives them **by reference** and the
+HostStreamExecutor moves pieces according to the schedule.  Chunk sizes
+mirror the paper: on-demand fetches one image row-group at a time; prefetch
+streams ``distance`` groups ahead.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.hoststream import HostStreamExecutor, StreamStats
+from repro.core.refspec import PrefetchSpec
+
+import jax
+import jax.numpy as jnp
+
+
+def run(n_pixels: int = 3600, *, groups: int = 16, batch_images: int = 8, tag: str = "fig3_small") -> list[dict]:
+    cfg = C.LungNNConfig(n_pixels=n_pixels, batch_images=batch_images)
+    params = C.init_lung_nn(cfg)
+    xs, ys = C.make_images(cfg, batch_images)
+    xs_host = np.asarray(xs)  # paper Host kind: accelerator can't address this
+    ys_dev = jnp.asarray(ys)
+
+    # split the pixel dimension into groups: each group is one "transfer"
+    assert n_pixels % groups == 0
+    gp = n_pixels // groups
+    w1_groups = [np.asarray(params["w1"][i * gp : (i + 1) * gp]) for i in range(groups)]
+    x_groups = [xs_host[:, i * gp : (i + 1) * gp] for i in range(groups)]
+
+    # phase 1: feed forward = accumulate x_g @ w1_g over groups, then head
+    @jax.jit
+    def ff_apply(carry, group):
+        xg, wg = group
+        return carry + xg @ wg
+
+    # phase 2: combine gradients — per-group grad of the first layer
+    @jax.jit
+    def grad_apply(carry, group):
+        xg, wg, dh = group  # dh: (B, hidden) upstream grad (precomputed)
+        gw = xg.T @ dh
+        return carry + jnp.sum(gw * wg), gw  # writeback group grads
+
+    # upstream pieces computed once on device (not part of the transfer study)
+    h = jax.nn.sigmoid(xs @ params["w1"])
+    p = jax.nn.sigmoid(h @ params["w2"])
+    dh = ((p - ys_dev) @ params["w2"].T) * h * (1 - h)
+
+    rows = []
+    for mode in ("eager", "on_demand", "prefetch"):
+        spec = PrefetchSpec(buffer_size=4, elements_per_fetch=1, distance=2)
+
+        # -- feed forward ----------------------------------------------------
+        ex = HostStreamExecutor(ff_apply)
+        st = StreamStats()
+        carry = jnp.zeros((batch_images, cfg.n_hidden), jnp.float32)
+        t = C.timed(
+            lambda: ex.run(
+                carry, list(zip(x_groups, w1_groups)), prefetch=spec, mode=mode, stats=st
+            )[0]
+        )
+        ff_s = t["median_s"]
+
+        # -- combine gradients (rw: grads written back to host) ---------------
+        ex2 = HostStreamExecutor(grad_apply, writeback=True)
+        st2 = StreamStats()
+        t2 = C.timed(
+            lambda: ex2.run(
+                jnp.zeros(()), list(zip(x_groups, w1_groups, [dh] * groups)),
+                prefetch=spec, mode=mode, stats=st2,
+            )[0]
+        )
+        cg_s = t2["median_s"]
+
+        # -- model update (no transfers — paper: identical across modes) ------
+        grads = C.combine_gradients(params, xs, ys)
+        upd = jax.jit(C.model_update)
+        mu_s = C.timed(lambda: upd(params, grads))["median_s"]
+
+        rows.append(
+            {
+                "mode": mode,
+                "feed_forward_s": ff_s,
+                "combine_grad_s": cg_s,
+                "model_update_s": mu_s,
+                "n_transfers": st.n_transfers,
+                "bytes_h2d": st.bytes_h2d,
+                "compute_s": st.compute_s,
+            }
+        )
+    C.print_table(f"paper Fig3 analogue ({tag}, {n_pixels} px) — measured on CPU",
+                  rows,
+                  ["mode", "feed_forward_s", "combine_grad_s", "model_update_s", "n_transfers"])
+    C.save_rows(tag, rows)
+    modeled = modeled_link_rows(rows, n_pixels, batch_images)
+    C.print_table(
+        f"paper-link model ({tag}): Epiphany 88 MB/s + 0.104 ms/request "
+        f"(paper's measured constants) applied to the RECORDED schedule",
+        modeled, ["mode", "n_requests", "transfer_busy_s", "total_s", "vs_prefetch"])
+    C.save_rows(tag + "_modeled", modeled)
+    return rows
+
+
+# paper-measured link constants (§5.1): Epiphany observed 88 MB/s; host
+# service latency ~0.104 ms/request (Table 2, 128B mean)
+PAPER_BW = 88e6
+PAPER_LAT = 0.104e-3
+
+
+def modeled_link_rows(rows: list[dict], n_pixels: int, batch_images: int) -> list[dict]:
+    """Apply the paper's link to the recorded transfer schedule.
+
+    The measured CPU rows above share one flaw as a reproduction: this
+    container's host->device 'link' is main memory (GB/s, ~us latency), so
+    the 21-25x on-demand penalty the paper measures over a ~100 MB/s board
+    link cannot physically appear.  The *schedule* (how many requests, how
+    many bytes, what overlaps) is real and recorded; this table replays it
+    against the paper's own measured constants.  on_demand_element is the
+    paper's true on-demand mode: one request per element.
+    """
+    by = {r["mode"]: r for r in rows}
+    bytes_total = by["prefetch"]["bytes_h2d"] / max(1, _REPEATS_GUESS)
+    compute = by["eager"]["compute_s"] / max(1, _REPEATS_GUESS)
+    n_groups = by["prefetch"]["n_transfers"] / max(1, _REPEATS_GUESS)
+    n_elements = n_pixels * batch_images
+    out = []
+
+    def total(n_req, overlap):
+        busy = n_req * PAPER_LAT + bytes_total / PAPER_BW
+        t = max(busy, compute) if overlap else busy + compute
+        return busy, t
+
+    for mode, n_req, overlap in (
+        ("eager", 2, False),  # bulk copy, then compute
+        ("on_demand_element", n_elements, False),  # paper's per-element fetch
+        ("on_demand_chunk", n_groups, False),
+        ("prefetch", n_groups, True),
+    ):
+        busy, t = total(n_req, overlap)
+        out.append({"mode": mode, "n_requests": int(n_req),
+                    "transfer_busy_s": busy, "total_s": t})
+    ref = next(r for r in out if r["mode"] == "prefetch")["total_s"]
+    for r in out:
+        r["vs_prefetch"] = r["total_s"] / ref
+    return out
+
+
+_REPEATS_GUESS = 4  # timed(): 1 warmup + 3 repeats accumulate into stats
+
+
+def main() -> int:
+    rows = run(3600, groups=16, tag="fig3_small")
+    modeled = {r["mode"]: r for r in modeled_link_rows(rows, 3600, 8)}
+    ok_order = (
+        modeled["prefetch"]["total_s"]
+        <= modeled["eager"]["total_s"]
+        <= modeled["on_demand_element"]["total_s"]
+    )
+    ratio = modeled["on_demand_element"]["total_s"] / modeled["prefetch"]["total_s"]
+    print(
+        f"claim checks (paper-link model): prefetch <= eager <= on-demand: {ok_order}; "
+        f"on-demand(element)/prefetch = {ratio:.0f}x (paper: 21-25x on Epiphany)"
+    )
+    return 0 if ok_order and ratio > 5 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

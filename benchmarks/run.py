@@ -1,0 +1,40 @@
+"""Benchmark aggregator: one harness per paper table/figure + kernel study.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig3 table2  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = {
+    "fig3": ("benchmarks.offload_modes", "paper Fig 3: eager/on-demand/prefetch (small images)"),
+    "fig4": ("benchmarks.offload_modes_full", "paper Fig 4: full-size images"),
+    "table1": ("benchmarks.power_model", "paper Table 1: throughput/power"),
+    "table2": ("benchmarks.transfer_stall", "paper Table 2: stall vs transfer size"),
+    "kernels": ("benchmarks.kernel_streaming", "kernel-level DMA schedule study"),
+}
+
+
+def main() -> int:
+    names = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    failures = []
+    for name in names:
+        mod_name, desc = SUITES[name]
+        print(f"\n########## {name}: {desc} ##########")
+        t0 = time.time()
+        mod = __import__(mod_name, fromlist=["main"])
+        rc = mod.main()
+        print(f"[{name}] rc={rc} ({time.time()-t0:.1f}s)")
+        if rc:
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        return 1
+    print(f"\nall {len(names)} benchmark suites passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

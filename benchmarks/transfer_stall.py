@@ -1,0 +1,74 @@
+"""Paper Table 2 analogue: per-transfer stall time vs transfer size.
+
+The paper's synthetic benchmark measures the time a micro-core stalls per
+single load for 128B / 1KB / 8KB transfers, on-demand vs prefetch, and finds
+them *nearly identical per transfer* — the end-to-end gap (Fig 3/4) comes
+from request COUNT.  We reproduce: stall = time the consumer blocks on one
+host->device transfer; prefetch hides it by issuing ``distance`` ahead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+
+
+def _measure(size_bytes: int, *, prefetch: bool, n: int = 64) -> dict:
+    elems = max(size_bytes // 4, 1)
+    host = [np.random.randn(elems).astype(np.float32) for _ in range(n)]
+
+    @jax.jit
+    def consume(acc, x):
+        return acc + jnp.sum(x)
+
+    acc = jnp.zeros(())
+    stalls = []
+    if prefetch:
+        inflight = [jax.device_put(host[0]), jax.device_put(host[1])]
+        for i in range(n):
+            if i + 2 < n:
+                inflight.append(jax.device_put(host[i + 2]))
+            t0 = time.perf_counter()
+            buf = inflight.pop(0)
+            jax.block_until_ready(buf)  # stall only if the copy isn't done
+            stalls.append(time.perf_counter() - t0)
+            acc = consume(acc, buf)
+    else:
+        for i in range(n):
+            t0 = time.perf_counter()
+            buf = jax.device_put(host[i])  # issued at use time: full stall
+            jax.block_until_ready(buf)
+            stalls.append(time.perf_counter() - t0)
+            acc = consume(acc, buf)
+    jax.block_until_ready(acc)
+    stalls = stalls[4:]  # drop warmup
+    return {
+        "min_ms": min(stalls) * 1e3,
+        "max_ms": max(stalls) * 1e3,
+        "mean_ms": float(np.mean(stalls)) * 1e3,
+    }
+
+
+def main() -> int:
+    rows = []
+    for size in (128, 1024, 8192, 262144, 2 ** 20):
+        for mode in ("on_demand", "prefetch"):
+            r = _measure(size, prefetch=(mode == "prefetch"))
+            rows.append({"size": size, "mode": mode, **r})
+    C.print_table("paper Table 2 analogue: stall time per transfer (ms)", rows,
+                  ["size", "mode", "min_ms", "mean_ms", "max_ms"])
+    C.save_rows("table2_stall", rows)
+    # claim: per-transfer stall is comparable across modes at small sizes
+    small = [r for r in rows if r["size"] <= 8192]
+    od = np.mean([r["mean_ms"] for r in small if r["mode"] == "on_demand"])
+    pf = np.mean([r["mean_ms"] for r in small if r["mode"] == "prefetch"])
+    print(f"small-transfer mean stall: on_demand {od:.4f} ms vs prefetch {pf:.4f} ms")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

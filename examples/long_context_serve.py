@@ -1,0 +1,59 @@
+"""Long-context serving with hierarchical KV placement.
+
+The paper's headline ("process arbitrarily large data sets") applied to the
+decode path: a recurrent/windowed arch (recurrentgemma family) decodes far
+past its cache window with O(window) state, and the KV cache can be placed
+at the Host memory kind (``--kv-kind pinned_host``) — the decode step still
+sees references; the runtime streams.
+
+Run:  PYTHONPATH=src:. python examples/long_context_serve.py
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import serve
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--kv-kind", default="device", choices=["device", "pinned_host"])
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    mesh = make_local_mesh()
+    print(
+        f"{args.arch} (smoke): window={cfg.window}, generating {args.gen} tokens "
+        f"past a {args.prompt_len}-token prompt; decode state is O(window), "
+        f"kv kind = {args.kv_kind}"
+    )
+    res = serve(
+        cfg,
+        mesh,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen=args.gen,
+        kv_kind=args.kv_kind,
+    )
+    gen = np.asarray(res["generated"])
+    assert gen.shape == (args.batch, args.gen)
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab_size)
+    print(
+        f"prefill {res['prefill_s']*1e3:.1f} ms; decode {res['decode_s']*1e3:.1f} ms"
+        f" ({res['tokens_per_s']:.1f} tok/s); sample: {gen[0][:12]}"
+    )
+    print("long-context serve: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

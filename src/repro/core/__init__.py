@@ -1,0 +1,54 @@
+"""Core abstractions: memory kinds, pass-by-reference offload, prefetch engines.
+
+This package is the paper's contribution (Jamieson & Brown, JPDC 2020)
+adapted to TPU memory hierarchies — see DESIGN.md §2.
+"""
+from repro.core import memkind
+from repro.core.memkind import (
+    ALL_DEVICE,
+    DEVICE,
+    HOST_ALL,
+    HOST_OPT,
+    HOST_PARAMS,
+    PINNED_HOST,
+    UNPINNED_HOST,
+    MemKind,
+    PlacementPolicy,
+    get_policy,
+    host_offload_supported,
+    place,
+    sharding_for,
+)
+from repro.core.offload import offload
+from repro.core.prefetch import eager_transfer, fetch_chunk, stream_blocks, streamed_scan
+from repro.core.refspec import Access, OffloadRef, PrefetchSpec
+from repro.core.hoststream import HostStreamExecutor, StreamStats
+from repro.core.localcopy import LocalCopyCache
+
+__all__ = [
+    "memkind",
+    "MemKind",
+    "PlacementPolicy",
+    "get_policy",
+    "host_offload_supported",
+    "place",
+    "sharding_for",
+    "DEVICE",
+    "PINNED_HOST",
+    "UNPINNED_HOST",
+    "ALL_DEVICE",
+    "HOST_OPT",
+    "HOST_PARAMS",
+    "HOST_ALL",
+    "offload",
+    "OffloadRef",
+    "PrefetchSpec",
+    "Access",
+    "streamed_scan",
+    "stream_blocks",
+    "fetch_chunk",
+    "eager_transfer",
+    "HostStreamExecutor",
+    "StreamStats",
+    "LocalCopyCache",
+]

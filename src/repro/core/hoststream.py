@@ -1,0 +1,162 @@
+"""Host-driver streaming engine: the paper's host process + channels, in JAX.
+
+The paper's architecture (§4, Fig 2) keeps bulk data on the host; a host-side
+service decodes references and feeds per-core channels (32 x 1KB cells) while
+device code computes.  This module is the direct analogue at framework level:
+model state stays **outside the XLA program** as host arrays; the driver
+issues asynchronous ``jax.device_put`` transfers for layer-group ``i+distance``
+while the jitted apply for group ``i`` runs.  Because transfers and compute
+are separate dispatches, this engine runs on *every* backend — including the
+CPU container, where it produces the real measurements behind EXPERIMENTS.md
+§Bench (the graph engine in ``prefetch.py`` is the production TPU path).
+
+Three transfer schedules, mirroring the paper's evaluation axes:
+
+``eager``      copy *all* groups, then compute (paper's original offload).
+``on_demand``  copy group i synchronously right before computing it
+               (paper's pass-by-reference without prefetch — the 21-25x
+               slowdown case when transfers are small).
+``prefetch``   keep ``distance`` groups in flight ahead of compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+from repro.core.refspec import Access, PrefetchSpec
+
+__all__ = ["StreamStats", "HostStreamExecutor"]
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Per-run accounting (the paper's Table 2 instrumentation)."""
+
+    mode: str = "prefetch"
+    n_transfers: int = 0
+    bytes_h2d: int = 0
+    bytes_d2h: int = 0
+    transfer_wait_s: float = 0.0  # time the *compute* path blocked on data
+    compute_s: float = 0.0
+    total_s: float = 0.0
+
+    def as_row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _nbytes(tree: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+class HostStreamExecutor:
+    """Drives ``carry = apply(carry, group_params)`` over host-resident groups.
+
+    Parameters
+    ----------
+    apply:
+        jitted per-group function ``(carry, group) -> carry`` (or
+        ``(carry, group) -> (carry, group_out)`` with ``writeback=True`` —
+        the paper's ``rw`` access modifier, used e.g. for streamed optimizer
+        state which must be copied back to its home kind).
+    device_sharding:
+        optional pytree of shardings for the staged groups.
+    """
+
+    def __init__(
+        self,
+        apply: Callable[..., Any],
+        *,
+        writeback: bool = False,
+        device_shardings: Optional[Pytree] = None,
+    ) -> None:
+        self._apply = apply
+        self._writeback = writeback
+        self._shardings = device_shardings
+
+    # -- transfer primitive (the paper's channel cell write) ----------------
+    def _put(self, group: Pytree) -> Pytree:
+        if self._shardings is not None:
+            return jax.device_put(group, self._shardings)
+        return jax.device_put(group)
+
+    def run(
+        self,
+        carry: Pytree,
+        groups: Sequence[Pytree],
+        *,
+        prefetch: Optional[PrefetchSpec] = None,
+        mode: str = "prefetch",
+        stats: Optional[StreamStats] = None,
+    ) -> tuple[Pytree, Optional[list]]:
+        """Execute all groups under the given schedule.  Returns the final
+        carry (+ written-back host groups when ``writeback``)."""
+        if mode not in ("eager", "on_demand", "prefetch"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "prefetch" and prefetch is None:
+            prefetch = PrefetchSpec()
+        distance = 0 if mode != "prefetch" else max(prefetch.distance, 1)
+        st = stats if stats is not None else StreamStats()
+        st.mode = mode
+        t_start = time.perf_counter()
+
+        outs: list = [] if self._writeback else None
+        n = len(groups)
+
+        if mode == "eager":
+            # bulk transfer first — the paper's original kernel invocation
+            staged = []
+            for grp in groups:
+                buf = self._put(grp)
+                st.n_transfers += 1
+                st.bytes_h2d += _nbytes(grp)
+                staged.append(buf)
+            t0 = time.perf_counter()
+            jax.block_until_ready(staged)
+            st.transfer_wait_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            for buf in staged:
+                carry = self._step(carry, buf, outs, st)
+            jax.block_until_ready(carry)
+            st.compute_s += time.perf_counter() - t0
+        else:
+            inflight: "OrderedDict[int, Pytree]" = OrderedDict()
+            issued = 0
+            for i in range(n):
+                # top up the pipeline to `distance` groups ahead
+                while issued <= min(i + distance, n - 1):
+                    inflight[issued] = self._put(groups[issued])
+                    st.n_transfers += 1
+                    st.bytes_h2d += _nbytes(groups[issued])
+                    issued += 1
+                buf = inflight.pop(i)
+                if mode == "on_demand":
+                    # the paper's blocking fetch: core stalls until data lands
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(buf)
+                    st.transfer_wait_s += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                carry = self._step(carry, buf, outs, st)
+                st.compute_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            jax.block_until_ready(carry)
+            st.compute_s += time.perf_counter() - t0
+
+        st.total_s = time.perf_counter() - t_start
+        return (carry, outs) if self._writeback else (carry, None)
+
+    def _step(self, carry: Pytree, buf: Pytree, outs: Optional[list], st: StreamStats) -> Pytree:
+        if self._writeback:
+            carry, group_out = self._apply(carry, buf)
+            host_out = jax.device_get(group_out)  # write back to home kind
+            st.bytes_d2h += _nbytes(group_out)
+            st.n_transfers += 1
+            outs.append(host_out)
+        else:
+            carry = self._apply(carry, buf)
+        return carry

@@ -1,0 +1,81 @@
+"""Paper §3.3 memory model: local-copy preference with write-through.
+
+"whenever a micro-core attempts to access a scalar variable or index of an
+array, held elsewhere in the memory hierarchy, preference is given to any
+local copy held on that micro-core. If there is no local copy, then a data
+transfer will be performed. [...] the write occurs both to the local copy
+and is also written back to the variable's location on the host."
+
+``LocalCopyCache`` is that model at framework granularity: a bounded pool of
+device-resident views over host-kind arrays.  Reads hit the local copy when
+present (paper: ``tmp = a; a = tmp * a`` fetches once); writes update the
+local copy AND write through to the home buffer; capacity eviction mirrors
+the paper's "locally held copies of data may be freed" for the on-demand
+central pool.  Within a device, operations are in program order; across
+devices only atomicity per chunk is guaranteed (no cross-core ordering) —
+documented, as in the paper.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+class LocalCopyCache:
+    def __init__(self, *, capacity_bytes: int = 64 * 2**20, sharding=None) -> None:
+        self.capacity = capacity_bytes
+        self._sharding = sharding
+        self._local: "OrderedDict[str, jax.Array]" = OrderedDict()
+        self._home: dict[str, np.ndarray] = {}
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0, "writebacks": 0}
+
+    # -- home registration (the variable's location in the hierarchy) -------
+    def register(self, name: str, value: np.ndarray) -> None:
+        self._home[name] = np.asarray(value)
+
+    def home(self, name: str) -> np.ndarray:
+        return self._home[name]
+
+    # -- reads ---------------------------------------------------------------
+    def read(self, name: str) -> jax.Array:
+        """Local copy preferred; fetch (H2D) on miss."""
+        if name in self._local:
+            self.stats["hits"] += 1
+            self._local.move_to_end(name)
+            return self._local[name]
+        self.stats["misses"] += 1
+        buf = (
+            jax.device_put(self._home[name], self._sharding)
+            if self._sharding is not None
+            else jax.device_put(self._home[name])
+        )
+        self._insert(name, buf)
+        return buf
+
+    # -- writes: local + write-through ----------------------------------------
+    def write(self, name: str, value: jax.Array) -> None:
+        self._insert(name, value)
+        self._home[name] = np.asarray(jax.device_get(value))  # write-through
+        self.stats["writebacks"] += 1
+
+    # -- pool management (paper: central storage pool, copies may be freed) ---
+    def _insert(self, name: str, buf: jax.Array) -> None:
+        self._local[name] = buf
+        self._local.move_to_end(name)
+        while self._bytes() > self.capacity and len(self._local) > 1:
+            evicted, _ = self._local.popitem(last=False)
+            self.stats["evictions"] += 1
+
+    def _bytes(self) -> int:
+        return sum(b.size * b.dtype.itemsize for b in self._local.values())
+
+    def invalidate(self, name: Optional[str] = None) -> None:
+        if name is None:
+            self._local.clear()
+        else:
+            self._local.pop(name, None)

@@ -1,0 +1,248 @@
+"""Memory kinds for hierarchical memory placement (paper §3.2, TPU-native).
+
+The paper introduces ``Host`` / ``Shared`` / ``Microcore`` *kind* objects that
+declare where in the memory hierarchy a tensor lives; kernels receive
+references regardless of kind, and the kind encapsulates transfer mechanics.
+
+On TPU the hierarchy is  host DRAM -> HBM -> VMEM.  JAX exposes the first two
+levels as sharding *memory kinds* (``pinned_host`` / ``device``); the VMEM
+level is managed inside Pallas kernels (see ``repro.kernels``).  This module
+provides:
+
+  * ``MemKind`` subclasses mirroring the paper's kinds,
+  * ``PlacementPolicy`` — per-state-group kind assignment (params / optimizer
+    moments / KV cache / activations), the "one-line change moves your data"
+    property of the paper,
+  * a backend capability probe with graceful fallback: backends whose runtime
+    cannot execute host-placed buffers (the CPU runtime in this container)
+    transparently map host kinds onto device memory while keeping the program
+    topology (slice + copy + double-buffer) identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "MemKind",
+    "Device",
+    "PinnedHost",
+    "UnpinnedHost",
+    "PlacementPolicy",
+    "ALL_DEVICE",
+    "HOST_OPT",
+    "HOST_PARAMS",
+    "HOST_ALL",
+    "backend_memory_kinds",
+    "host_offload_supported",
+    "resolve_kind",
+    "sharding_for",
+    "place",
+]
+
+
+class MemKind:
+    """A level of the memory hierarchy.  Subclass to add a level (paper §3.2:
+    'To create a kind representing a new level in the memory hierarchy
+    requires a new Python class, inheriting from the Kind class')."""
+
+    #: the JAX memory-kind string this level maps to
+    jax_kind: str = "device"
+    #: ordering in the hierarchy; higher = further from the compute units
+    level: int = 0
+    #: can the accelerator's compute units load/store this level directly?
+    directly_addressable: bool = True
+
+    def __repr__(self) -> str:  # pragma: no cover - trivial
+        return f"{type(self).__name__}(jax_kind={self.jax_kind!r}, level={self.level})"
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, MemKind) and self.jax_kind == other.jax_kind
+
+    def __hash__(self) -> int:
+        return hash(self.jax_kind)
+
+
+class Device(MemKind):
+    """HBM — the paper's ``Microcore``/``Shared`` analogue (fast, bounded)."""
+
+    jax_kind = "device"
+    level = 0
+    directly_addressable = True
+
+
+class PinnedHost(MemKind):
+    """Host DRAM, DMA-reachable but not addressable by compute — the paper's
+    ``Host`` kind ('allocates the data in the large host memory, not
+    accessible directly by the micro-cores')."""
+
+    jax_kind = "pinned_host"
+    level = 2
+    directly_addressable = False
+
+
+class UnpinnedHost(MemKind):
+    """Pageable host DRAM (slowest tier; staging only)."""
+
+    jax_kind = "unpinned_host"
+    level = 3
+    directly_addressable = False
+
+
+DEVICE = Device()
+PINNED_HOST = PinnedHost()
+UNPINNED_HOST = UnpinnedHost()
+
+_KIND_BY_NAME = {
+    "device": DEVICE,
+    "pinned_host": PINNED_HOST,
+    "unpinned_host": UNPINNED_HOST,
+}
+
+
+def as_kind(kind: "MemKind | str") -> MemKind:
+    if isinstance(kind, MemKind):
+        return kind
+    try:
+        return _KIND_BY_NAME[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown memory kind {kind!r}; expected one of {sorted(_KIND_BY_NAME)}"
+        ) from None
+
+
+@functools.cache
+def backend_memory_kinds() -> tuple[str, ...]:
+    """Memory kinds the current backend *enumerates*."""
+    dev = jax.devices()[0]
+    try:
+        return tuple(m.kind for m in dev.addressable_memories())
+    except Exception:  # pragma: no cover - very old backends
+        return ("device",)
+
+
+@functools.cache
+def host_offload_supported() -> bool:
+    """True iff the backend can *compile and execute* host-placed buffers.
+
+    The CPU runtime enumerates ``pinned_host`` but lacks the
+    ``annotate_device_placement`` custom-call implementation, so we probe by
+    compiling a tiny host->device copy.
+    """
+    if "pinned_host" not in backend_memory_kinds():
+        return False
+    try:
+        import jax.numpy as jnp
+
+        dev = jax.devices()[0]
+        host_s = jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+        dev_s = jax.sharding.SingleDeviceSharding(dev, memory_kind="device")
+
+        def f(x):
+            return jax.device_put(x, dev_s) * 2.0
+
+        jax.jit(f, in_shardings=(host_s,), out_shardings=dev_s).lower(
+            jax.ShapeDtypeStruct((8,), jnp.float32)
+        ).compile()
+        return True
+    except Exception:
+        return False
+
+
+def resolve_kind(kind: "MemKind | str", *, allow_fallback: bool = True) -> MemKind:
+    """Map a requested kind to one the backend can execute.
+
+    On backends without host-offload execution support, host kinds fall back
+    to ``Device`` (identical program topology, both tiers physically in the
+    same memory).  Lowering-only paths (the dry-run) may pass
+    ``allow_fallback=False`` to keep the true placement in the StableHLO.
+    """
+    kind = as_kind(kind)
+    if kind.jax_kind == "device":
+        return kind
+    if not allow_fallback or host_offload_supported():
+        return kind
+    return DEVICE
+
+
+def sharding_for(
+    mesh: Mesh,
+    spec: PartitionSpec,
+    kind: "MemKind | str" = DEVICE,
+    *,
+    allow_fallback: bool = True,
+) -> NamedSharding:
+    """NamedSharding at a given hierarchy level."""
+    kind = resolve_kind(kind, allow_fallback=allow_fallback)
+    return NamedSharding(mesh, spec, memory_kind=kind.jax_kind)
+
+
+def place(tree: Any, mesh: Mesh, specs: Any, kind: "MemKind | str" = DEVICE) -> Any:
+    """``device_put`` a pytree at a hierarchy level.  ``specs`` is a matching
+    pytree of PartitionSpec (or a single spec broadcast over leaves)."""
+    kind = resolve_kind(kind)
+    if isinstance(specs, PartitionSpec):
+        specs = jax.tree.map(lambda _: specs, tree)
+    shardings = jax.tree.map(
+        lambda s: sharding_for(mesh, s, kind),
+        specs,
+        is_leaf=lambda s: isinstance(s, PartitionSpec),
+    )
+    return jax.device_put(tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Placement policies — the paper's "swap the kind, everything else unchanged"
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPolicy:
+    """Where each state group lives in the hierarchy.
+
+    Mirrors the paper's memory-kind declarations at the granularity that
+    matters for a training/serving framework.  ``params_stream`` /
+    ``opt_stream`` toggle per-layer streaming (pass-by-reference + prefetch)
+    for host-resident groups; non-streamed host groups are bulk-copied at the
+    step boundary (the paper's "eager" mode).
+    """
+
+    name: str = "all_device"
+    params: MemKind = DEVICE
+    opt_state: MemKind = DEVICE
+    kv_cache: MemKind = DEVICE
+    #: prefetch distance (layers ahead) when params are host-resident
+    params_prefetch_distance: int = 1
+    #: layers fetched per transfer ("elements per pre-fetch" of paper §3.1)
+    params_layers_per_fetch: int = 1
+
+    def with_(self, **kw: Any) -> "PlacementPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def requires_host(self) -> bool:
+        return any(
+            k.jax_kind != "device" for k in (self.params, self.opt_state, self.kv_cache)
+        )
+
+
+ALL_DEVICE = PlacementPolicy(name="all_device")
+#: Adam moments + f32 master on host — the biggest win for large dense models
+HOST_OPT = PlacementPolicy(name="host_opt", opt_state=PINNED_HOST)
+#: weights live on host, streamed per layer with prefetch (paper's flagship mode)
+HOST_PARAMS = PlacementPolicy(name="host_params", params=PINNED_HOST)
+HOST_ALL = PlacementPolicy(
+    name="host_all", params=PINNED_HOST, opt_state=PINNED_HOST, kv_cache=PINNED_HOST
+)
+
+POLICIES = {p.name: p for p in (ALL_DEVICE, HOST_OPT, HOST_PARAMS, HOST_ALL)}
+
+
+def get_policy(name: str) -> PlacementPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown placement policy {name!r}; have {sorted(POLICIES)}") from None

@@ -1,0 +1,105 @@
+"""Offload argument annotations: pass-by-reference + prefetch specs (paper §3.1).
+
+The paper's kernel annotation is::
+
+    @offload(prefetch={a: {buffer_size:10, elements_per_prefetch:2,
+                           distance:10, access:'ro'}})
+    def mykernel(a, b): ...
+
+``PrefetchSpec`` carries exactly those five fields; ``OffloadRef`` binds a
+kernel argument to a memory kind + optional prefetch spec.  These are pure
+declarations — ``repro.core.offload`` and the two streaming engines interpret
+them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from jax.sharding import PartitionSpec
+
+from repro.core import memkind as mk
+
+__all__ = ["Access", "PrefetchSpec", "OffloadRef"]
+
+
+class Access:
+    READ_ONLY = "ro"
+    READ_WRITE = "rw"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchSpec:
+    """Paper §3.1: ``prefetch={variable, buffer_size, elements_per_prefetch,
+    distance, access_modifier}``.
+
+    Units here are *chunks* of the streamed leading axis (layers for weight
+    streaming, blocks/rows for data streaming):
+
+    buffer_size
+        number of chunks resident device-side at once (ring depth).
+    elements_per_fetch
+        chunks moved per transfer — paper: "retrieves multiple pieces of data
+        on each access [so] the overall number of data accesses is
+        significantly lower".
+    distance
+        how many chunks ahead transfers are issued.  ``0`` degenerates to the
+        paper's *on-demand* mode (synchronous fetch at use time).
+    access
+        ``'ro'`` — no write-back; ``'rw'`` — written chunks are copied back to
+        the home memory kind (atomically per chunk, in order per device).
+    """
+
+    buffer_size: int = 2
+    elements_per_fetch: int = 1
+    distance: int = 1
+    access: str = Access.READ_ONLY
+
+    def __post_init__(self) -> None:
+        if self.buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        if self.elements_per_fetch < 1:
+            raise ValueError("elements_per_fetch must be >= 1")
+        if self.distance < 0:
+            raise ValueError("distance must be >= 0")
+        if self.access not in (Access.READ_ONLY, Access.READ_WRITE):
+            raise ValueError(f"access must be 'ro' or 'rw', got {self.access!r}")
+        if self.distance >= self.buffer_size + self.elements_per_fetch:
+            raise ValueError(
+                "distance must be < buffer_size + elements_per_fetch "
+                f"(got distance={self.distance}, buffer_size={self.buffer_size})"
+            )
+
+    @property
+    def on_demand(self) -> bool:
+        return self.distance == 0
+
+
+ON_DEMAND = PrefetchSpec(buffer_size=1, elements_per_fetch=1, distance=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadRef:
+    """Binds one kernel argument to a hierarchy level.
+
+    The argument is passed to the device *by reference*: the kernel sees the
+    data, but physically only chunk-sized pieces ever occupy device memory
+    when ``kind`` is a host kind and ``prefetch`` streaming is active.
+    """
+
+    kind: mk.MemKind = mk.DEVICE
+    spec: PartitionSpec = PartitionSpec()
+    prefetch: Optional[PrefetchSpec] = None
+    #: leading axis that streaming chunks (None = bulk transfer, paper "eager")
+    stream_axis: Optional[int] = 0
+
+    def __post_init__(self) -> None:
+        if self.prefetch is not None and self.kind.jax_kind == "device":
+            raise ValueError(
+                "prefetch streaming only applies to host-resident arguments; "
+                "device-kind arguments are already at the fast tier"
+            )
+
+    @property
+    def streamed(self) -> bool:
+        return self.prefetch is not None and self.stream_axis is not None

@@ -1,0 +1,4 @@
+from repro.data.synthetic import synthetic_batch, SyntheticConfig
+from repro.data.loader import PrefetchLoader
+
+__all__ = ["synthetic_batch", "SyntheticConfig", "PrefetchLoader"]

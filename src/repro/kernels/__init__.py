@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the compute hot-spots of the offload data path.
+
+Each kernel is a subpackage with:
+  ``kernel.py``  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target),
+  ``ops.py``     jit'd public wrapper (padding, dtype policy, interpret fallback),
+  ``ref.py``     pure-jnp oracle used by the test sweeps.
+
+``streamed_matmul`` is the paper's contribution one level down the hierarchy:
+the weight operand stays in HBM (passed **by reference**, ``pl.ANY``) and is
+DMA'd tile-wise into a VMEM ring whose depth/lookahead are the paper's
+``buffer_size``/``distance`` prefetch knobs.  ``distance=0`` is the paper's
+on-demand mode (blocking fetch per tile); ``distance>=1`` overlaps the next
+tile's DMA with the current tile's MXU work.
+
+``flash_attention`` (train/prefill) and ``decode_attention`` (one query token
+vs an arbitrarily large KV cache, KV streamed block-wise through a VMEM ring)
+bound VMEM working sets the same way the paper bounds on-core buffers.
+
+``rglru_scan`` streams the RG-LRU linear recurrence (the hybrid-arch
+hot-spot): one HBM pass with a (chunk_t x block_w) VMEM working set,
+state carried across time chunks in scratch, vs the associative scan's
+O(S log S) materialized intermediates.
+"""

@@ -1,0 +1,54 @@
+"""Public jit'd wrapper for flash-decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.refspec import PrefetchSpec
+from repro.kernels.decode_attention.kernel import decode_attention_p
+
+_DEFAULT_SPEC = PrefetchSpec(buffer_size=2, elements_per_fetch=1, distance=1)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block_kv", "interpret"))
+def decode_attention(
+    q: jax.Array,  # (B, N, H)
+    k: jax.Array,  # (B, T, KH, H)
+    v: jax.Array,  # (B, T, KH, H)
+    lengths: jax.Array,  # (B,) int32 — valid prefix per sequence
+    *,
+    spec: PrefetchSpec = _DEFAULT_SPEC,
+    block_kv: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One-token GQA attention vs a large KV cache streamed from HBM.
+
+    Matches ``ref.decode_attention_ref``; the PrefetchSpec only changes the
+    DMA schedule, never the value (property-tested).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, n, h = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = n // kh
+
+    bkv = min(block_kv, _ceil_to(t, 128))
+    tp = _ceil_to(t, bkv)
+
+    qg = q.reshape(b, kh, g, h).reshape(b * kh, g, h)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * kh, t, h)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * kh, t, h)
+    kg = jnp.pad(kg, ((0, 0), (0, tp - t), (0, 0)))
+    vg = jnp.pad(vg, ((0, 0), (0, tp - t), (0, 0)))
+    lens = jnp.repeat(lengths.astype(jnp.int32), kh)
+
+    out = decode_attention_p(
+        qg, kg, vg, lens, spec=spec, block_kv=bkv, interpret=interpret
+    )
+    return out.reshape(b, kh, g, h).reshape(b, n, h)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, N, H) — one new token per sequence
+    k: jnp.ndarray,  # (B, T, KH, H) — cache
+    v: jnp.ndarray,  # (B, T, KH, H)
+    length: jnp.ndarray,  # (B,) int32 — valid cache prefix per sequence
+) -> jnp.ndarray:
+    """GQA decode attention over the valid prefix ``[0, length)`` of the cache."""
+    b, n, h = q.shape
+    kh = k.shape[2]
+    g = n // kh
+    qg = q.reshape(b, kh, g, h)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, k).astype(jnp.float32)
+    scores = scores * (h ** -0.5)
+    valid = jnp.arange(k.shape[1])[None] < length[:, None]  # (B, T)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, v)
+    return out.reshape(b, n, h)

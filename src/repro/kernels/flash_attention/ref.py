@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for blockwise (flash) attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, S, N, H)
+    k: jnp.ndarray,  # (B, T, KH, H)
+    v: jnp.ndarray,  # (B, T, KH, H)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Full-materialization GQA attention with f32 softmax.
+
+    ``window > 0`` restricts key position ``t`` to ``qpos - window < t``
+    (sliding-window / local attention).  ``q_offset`` places query 0 at
+    absolute position ``q_offset`` (prefill-continuation / decode).
+    """
+    b, s, n, h = q.shape
+    kh = k.shape[2]
+    g = n // kh
+    qg = q.reshape(b, s, kh, g, h)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (h ** -0.5)
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, n, h)

@@ -1,0 +1,42 @@
+"""Public jit'd wrapper for the linear-recurrence kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import linear_recurrence_p
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_t", "block_w", "interpret"))
+def linear_recurrence(
+    a: jax.Array,  # (B, S, W)
+    b: jax.Array,
+    *,
+    chunk_t: int = 128,
+    block_w: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``h_t = a_t h_{t-1} + b_t`` over axis 1, h_0 = 0; matches
+    ``ref.linear_recurrence_ref``.
+
+    Padding: time is padded with (a=1, b=0) — identity steps — and channels
+    with zeros; both are sliced away.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bsz, s, w = a.shape
+    ct = min(chunk_t, _ceil_to(s, 8))
+    bw = min(block_w, _ceil_to(w, 128))
+    sp, wp = _ceil_to(s, ct), _ceil_to(w, bw)
+    ap = jnp.pad(a, ((0, 0), (0, sp - s), (0, wp - w)), constant_values=1.0)
+    if wp != w:  # channel padding must not see a=1 with b=0 junk; zero is fine
+        ap = ap.at[:, :, w:].set(0.0)
+    bp = jnp.pad(b, ((0, 0), (0, sp - s), (0, wp - w)))
+    out = linear_recurrence_p(ap, bp, chunk_t=ct, block_w=bw, interpret=interpret)
+    return out[:, :s, :w]

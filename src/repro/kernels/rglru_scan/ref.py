@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the first-order linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_recurrence_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t  over axis 1, h_0 = 0.
+
+    a, b: (B, S, W) f32.  Returns h: (B, S, W) f32.  This is the RG-LRU
+    training recurrence with the gates folded into (a, b) (see
+    repro.models.rglru._gates).
+    """
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step,
+        jnp.zeros((a.shape[0], a.shape[2]), a.dtype),
+        (a.swapaxes(0, 1), b.swapaxes(0, 1)),
+    )
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,67 @@
+"""Public jit'd wrapper for the streamed matmul kernel.
+
+Handles block padding, batch-dim flattening, dtype policy, and backend
+dispatch (interpret on CPU; compiled Mosaic on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.refspec import PrefetchSpec
+from repro.kernels.streamed_matmul.kernel import streamed_matmul_p
+
+_DEFAULT_SPEC = PrefetchSpec(buffer_size=2, elements_per_fetch=1, distance=1)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "block_m", "block_n", "block_k", "interpret"),
+)
+def streamed_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    spec: PrefetchSpec = _DEFAULT_SPEC,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``y[..., n] = x[..., k] @ w[k, n]`` with HBM-resident, ring-prefetched w.
+
+    ``x`` may carry leading batch dims; they are flattened into M. Shapes are
+    padded up to block multiples and the result is sliced back, so any shape
+    is accepted.  Semantics match :func:`repro.kernels.streamed_matmul.ref.
+    matmul_ref` for every ``PrefetchSpec`` (property-tested).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    *lead, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    bk = min(block_k, _ceil_to(k, 128))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = streamed_matmul_p(
+        xp, wp, spec=spec, block_m=bm, block_n=bn, block_k=bk, interpret=interpret
+    )
+    return out[:m, :n].reshape(*lead, n)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the streamed matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """``y = x @ w`` with f32 accumulation, result in ``x.dtype``.
+
+    Semantics the kernel must match for every PrefetchSpec setting (paper
+    §3.1: "the prefetch argument does not impact the correctness of the
+    code, the result of computation is identical with and without
+    pre-fetching").
+    """
+    acc = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    return acc.astype(x.dtype)

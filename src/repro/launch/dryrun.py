@@ -1,0 +1,399 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — JAX locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+Per cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. resolves the sharding plan (train or serve mode per shape kind),
+  3. jits the step function with explicit in/out shardings and
+     ``.lower().compile()``s it against ShapeDtypeStruct inputs,
+  4. records ``memory_analysis()`` (residency proof) + ``cost_analysis()``,
+  5. (single-pod) compiles two *unrolled layer probes* to derive
+     scan-corrected roofline terms (see repro.roofline.analysis),
+  6. appends the cell result to a JSON results file.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun.json]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, cell_is_runnable, get_config, input_specs
+from repro.configs.base import SHAPES, ModelConfig
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import sharding as sh
+from repro.roofline import analysis as ra
+from repro.train import steps as st
+
+DEFAULT_OUT = "results/dryrun.json"
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+def _shardings(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def _dryrun_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Production overrides for at-scale lowering: chunked attention keeps
+    the score working set bounded (the Pallas flash kernel is the TPU path;
+    it cannot lower on this CPU container — see DESIGN.md)."""
+    return dataclasses.replace(cfg, attn_impl="chunked")
+
+
+def _probe_cfg(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    """Unrolled probe: no layer scan, inner scans disabled where cheap.
+
+    The mLSTM chunk scan is left in place: its projections (the dominant
+    matmuls) run outside the scan and are counted exactly; the intra-chunk
+    cell (<5% of block FLOPs) is undercounted by the while-counted-once rule
+    and added back analytically (``residual_inner_scan_flops``).  Forcing
+    chunk=seq instead creates (B, H, S, S)-shaped HLO that stalls the CPU
+    compiler for tens of minutes.
+    """
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        use_scan=False,
+        attn_impl="xla",
+        moe_group_size=1 << 30,
+    )
+
+
+def _period(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return len(cfg.block_pattern)
+    if cfg.family == "ssm" and cfg.slstm_every:
+        return cfg.slstm_every
+    return 1
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: str,
+    mesh,
+    *,
+    probe_layers: Optional[int] = None,
+    donate: bool = True,
+    cfg_overrides: Optional[dict] = None,
+    plan_overrides: Optional[dict] = None,
+):
+    """Lower+compile one cell.  Returns (compiled, step_kind, n_tokens)."""
+    seq, batch, step_kind = SHAPES[shape]
+    mode = "train" if step_kind == "train" else "serve"
+    overrides = dict(plan_overrides or {})
+    if mode == "serve" and "serve_expert_fsdp" not in overrides:
+        # expert FSDP only when the experts cannot fit pure TP (§Perf B1):
+        # mixtral fits (5.9 GiB) -> off; qwen3 (29 GiB) -> on
+        model_size = mesh.shape["model"]
+        overrides["serve_expert_fsdp"] = (
+            cfg.param_count()[0] * 2 / model_size > 10 * 2**30
+        )
+    plan = sh.make_plan(mesh, mode=mode, **overrides)
+    if probe_layers is not None:
+        cfg = _probe_cfg(cfg, probe_layers)
+    else:
+        cfg = _dryrun_cfg(cfg)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+
+    batch_tree = input_specs(cfg, shape)
+    b_shardings = _shardings(mesh, sh.batch_specs(plan, batch_tree, batch))
+
+    with mesh:
+        if step_kind == "train":
+            params, opt_state = st.abstract_train_state(cfg)
+            p_specs = sh.param_specs(plan, params)
+            o_specs = sh.opt_state_specs(plan, p_specs, params)
+            p_sh = _shardings(mesh, p_specs)
+            o_sh = _shardings(mesh, o_specs)
+            sharder = (
+                sh.make_sharder(plan, params, batch, seq_len=seq,
+                                seq_shard=not plan.pure_dp)
+                if plan.use_sharder else None
+            )
+            fn = st.make_train_step(cfg, AdamWConfig(), mesh, sharder)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_sh, o_sh, b_shardings),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(params, opt_state, batch_tree)
+        elif step_kind == "prefill":
+            params = st.abstract_params(cfg)
+            caches = st.abstract_caches(cfg, batch, seq)
+            p_specs = sh.param_specs(plan, params)
+            c_specs = sh.cache_specs_tree(plan, caches, batch)
+            p_sh = _shardings(mesh, p_specs)
+            c_sh = _shardings(mesh, c_specs)
+            sharder = sh.make_sharder(plan, params, batch) if plan.use_sharder else None
+            fn = st.make_prefill_step(cfg, batch, seq, mesh, sharder)
+            jitted = jax.jit(
+                fn, in_shardings=(p_sh, b_shardings), out_shardings=(None, c_sh)
+            )
+            lowered = jitted.lower(params, batch_tree)
+        else:  # decode
+            params = st.abstract_params(cfg)
+            caches = st.abstract_caches(cfg, batch, seq)
+            p_specs = sh.param_specs(plan, params)
+            c_specs = sh.cache_specs_tree(plan, caches, batch)
+            p_sh = _shardings(mesh, p_specs)
+            c_sh = _shardings(mesh, c_specs)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            sharder = sh.make_sharder(plan, params, batch) if plan.use_sharder else None
+            fn = st.make_decode_step(cfg, mesh, sharder)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_sh, c_sh, b_shardings, NamedSharding(mesh, P())),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(params, caches, batch_tree, pos)
+        compiled = lowered.compile()
+    return compiled, step_kind, seq * batch
+
+
+def _mem_fields(compiled) -> dict[str, float]:
+    m = compiled.memory_analysis()
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {k: float(getattr(m, k, 0) or 0) for k in keys}
+    out["per_device_total_gib"] = (
+        out["argument_size_in_bytes"]
+        + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"]
+        - out["alias_size_in_bytes"]
+    ) / 2**30
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    probes: bool = True,
+    verbose: bool = True,
+    cfg_overrides: Optional[dict] = None,
+    plan_overrides: Optional[dict] = None,
+) -> dict[str, Any]:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    ok, why = cell_is_runnable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "runnable": ok,
+    }
+    if not ok:
+        rec["skip_reason"] = why
+        if verbose:
+            print(f"[skip] {arch} x {shape}: {why}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    seq, batch, step_kind = SHAPES[shape]
+    t0 = time.time()
+    try:
+        compiled, step_kind, _ = lower_cell(
+            cfg, shape, mesh,
+            cfg_overrides=cfg_overrides, plan_overrides=plan_overrides,
+        )
+    except Exception as e:  # noqa: BLE001 — recorded, the harness reports it
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {arch} x {shape} [{mesh_name}]: {rec['error'][:200]}")
+        return rec
+
+    rec["ok"] = True
+    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["step_kind"] = step_kind
+    rec["memory"] = _mem_fields(compiled)
+    rec["cost_raw"] = ra.cost_terms(compiled)
+    hlo = compiled.as_text()
+    rec["coll_raw"] = ra.collective_bytes_from_hlo(hlo)
+    del compiled, hlo
+
+    if probes and not multi_pod:
+        p = _period(cfg)
+        L = cfg.n_layers
+        try:
+            c1, _, _ = lower_cell(cfg, shape, mesh, probe_layers=p, donate=False,
+                                  cfg_overrides=cfg_overrides, plan_overrides=plan_overrides)
+            t1 = ra.cost_terms(c1)
+            x1 = ra.collective_bytes_from_hlo(c1.as_text())
+            del c1
+            c2, _, _ = lower_cell(cfg, shape, mesh, probe_layers=2 * p, donate=False,
+                                  cfg_overrides=cfg_overrides, plan_overrides=plan_overrides)
+            t2 = ra.cost_terms(c2)
+            x2 = ra.collective_bytes_from_hlo(c2.as_text())
+            del c2
+            periods = L // p
+            scale = lambda a, b: a + (periods - 1) * (b - a)
+            flops = scale(t1["flops"], t2["flops"])
+            bytes_ = scale(t1["bytes"], t2["bytes"])
+            coll = {k: int(scale(x1[k], x2[k])) for k in x1}
+            res = ra.RooflineResult(
+                arch=arch,
+                shape=shape,
+                mesh=mesh_name,
+                step_kind=step_kind,
+                n_devices=n_dev,
+                hlo_flops=flops,
+                hlo_bytes=bytes_,
+                coll_bytes_by_class=coll,
+                coll_bytes_weighted=ra.weighted_collective_bytes(coll),
+                residual_flops=ra.residual_inner_scan_flops(
+                    cfg, step_kind, seq, batch, n_dev
+                ),
+                model_flops_global=ra.model_flops(cfg, step_kind, seq, batch),
+                analytic_bytes=ra.analytic_hbm_bytes(
+                    cfg,
+                    step_kind,
+                    seq,
+                    batch,
+                    n_devices=n_dev,
+                    tp_degree=1 if (plan_overrides or {}).get("pure_dp") else None,
+                ),
+            )
+            rec["probe"] = {
+                "flops": flops,
+                "bytes": bytes_,
+                "coll": coll,
+                "coll_weighted": res.coll_bytes_weighted,
+                "residual_flops": res.residual_flops,
+                "model_flops_global": res.model_flops_global,
+                "analytic_bytes": res.analytic_bytes,
+            }
+            rec["roofline"] = res.terms()
+            if verbose:
+                print(ra.roofline_report(res))
+        except Exception as e:  # noqa: BLE001
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+            if verbose:
+                print(f"[probe-fail] {arch} x {shape}: {rec['probe_error'][:200]}")
+
+    if verbose:
+        mem = rec["memory"]
+        print(
+            f"[ok] {arch} x {shape} [{mesh_name}] compile={rec['compile_s']}s "
+            f"mem/dev={mem['per_device_total_gib']:.2f} GiB"
+        )
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _load(path: Path) -> list[dict]:
+    if path.exists():
+        return json.loads(path.read_text())
+    return []
+
+
+def _save(path: Path, rows: list[dict]) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(rows, indent=1))
+    tmp.rename(path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true", help="re-run completed cells")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="ModelConfig override (hillclimb A/B), e.g. decode_cache_in_carry=true")
+    ap.add_argument("--plan-set", action="append", default=[], metavar="K=V",
+                    help="ShardingPlan override, e.g. attn_indivisible=replicate")
+    args = ap.parse_args()
+
+    def parse_kv(items):
+        out = {}
+        for it in items:
+            k, v = it.split("=", 1)
+            if v.lower() in ("true", "false"):
+                out[k] = v.lower() == "true"
+            else:
+                try:
+                    out[k] = int(v)
+                except ValueError:
+                    out[k] = v
+        return out
+
+    cfg_overrides = parse_kv(args.set)
+    plan_overrides = parse_kv(getattr(args, "plan_set"))
+
+    out = Path(args.out)
+    rows = _load(out)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in rows if r.get("ok") or not r.get("runnable", True)}
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+
+    cells = (
+        [(a, s) for a in ARCHS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    n_fail = 0
+    for arch, shape in cells:
+        if not arch or not shape:
+            ap.error("--arch/--shape required unless --all")
+        if not args.force and (arch, shape, mesh_name) in done:
+            print(f"[cached] {arch} x {shape} [{mesh_name}]")
+            continue
+        rec = run_cell(
+            arch, shape, multi_pod=args.multi_pod, probes=not args.no_probes,
+            cfg_overrides=cfg_overrides or None, plan_overrides=plan_overrides or None,
+        )
+        rows = [
+            r for r in rows
+            if not (r["arch"] == arch and r["shape"] == shape and r["mesh"] == mesh_name)
+        ] + [rec]
+        _save(out, rows)
+        if rec.get("runnable") and not rec.get("ok"):
+            n_fail += 1
+        jax.clear_caches()
+    print(f"done: {len(cells)} cells, {n_fail} failures -> {out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

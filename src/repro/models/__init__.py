@@ -1,0 +1,27 @@
+"""Model substrate: every assigned architecture family, pure functional JAX."""
+from repro.models import attention, frontends, layers, moe, rglru, rope, transformer, xlstm
+from repro.models.transformer import (
+    decode_step,
+    forward_train,
+    init_caches,
+    init_model,
+    lm_loss,
+    prefill,
+)
+
+__all__ = [
+    "attention",
+    "frontends",
+    "layers",
+    "moe",
+    "rglru",
+    "rope",
+    "transformer",
+    "xlstm",
+    "init_model",
+    "init_caches",
+    "forward_train",
+    "prefill",
+    "decode_step",
+    "lm_loss",
+]

@@ -1,0 +1,294 @@
+"""GQA attention: full / sliding-window, with ring-buffer KV caches.
+
+Design notes (sharding-aware):
+  * qkv/o weights are kept 3-D ``(D, N, H)`` / ``(N, H, D)`` so heads are an
+    einsum dim — no reshapes across sharded axes, GSPMD shards heads (or
+    head_dim for archs whose kv-head count doesn't divide the model axis)
+    without data movement.
+  * GQA is computed grouped: q ``(B,S,K,G,H)`` against k/v ``(B,T,K,H)`` —
+    KV heads are never materialized ``G``-fold.
+  * softmax in f32; scores dtype f32.
+
+Cache layout:
+  full attention: ``{"k": (B, T, K, H), "v": ...}`` — slot ``t`` holds
+  position ``t``; validity is ``slot <= pos``.
+  sliding window:  ``{"k": (B, W, K, H), "v": ..., "slot_pos": (W,) int32}``
+  — ring buffer; ``slot_pos[j]`` is the absolute position held in slot ``j``
+  (-1 = empty).  This is what makes 500k-token decode O(window) for SWA
+  archs (mixtral) and O(window=2048) for RecurrentGemma's local attention.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import Params
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, n, k, h = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "wq": layers.fan_in_init(ks[0], (d, n, h), d),
+        "wk": layers.fan_in_init(ks[1], (d, k, h), d),
+        "wv": layers.fan_in_init(ks[2], (d, k, h), d),
+        "wo": layers.fan_in_init(ks[3], (n, h, d), n * h),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n, h), jnp.float32)
+        p["bk"] = jnp.zeros((k, h), jnp.float32)
+        p["bv"] = jnp.zeros((k, h), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rms_head_norm(ks[4], h)
+        p["k_norm"] = layers.init_rms_head_norm(ks[5], h)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16) -> Params:
+    k, h = cfg.n_kv_heads, cfg.head_dim
+    cache: Params = {
+        "k": jnp.zeros((batch, cache_len, k, h), dtype),
+        "v": jnp.zeros((batch, cache_len, k, h), dtype),
+    }
+    if cfg.attn_type == "swa" or (cfg.family == "hybrid" and cfg.window):
+        cache["slot_pos"] = jnp.full((cache_len,), -1, jnp.int32)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for the dry-run."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# qkv projection (shared by all modes)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = layers.head_norm_apply(p["q_norm"], q)
+        k = layers.head_norm_apply(p["k_norm"], k)
+    return q, k, v
+
+
+def _gqa_attend(
+    cfg: ModelConfig,
+    q: jax.Array,  # (B, S, N, H)
+    k: jax.Array,  # (B, T, K, H)
+    v: jax.Array,  # (B, T, K, H)
+    mask: jax.Array,  # (S, T) or (B, S, T) bool — True = attend
+) -> jax.Array:
+    b, s, n, h = q.shape
+    kh = k.shape[2]
+    g = n // kh
+    qg = q.reshape(b, s, kh, g, h)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (h ** -0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, n, h)
+
+
+def _gqa_attend_chunked(
+    cfg: ModelConfig,
+    q: jax.Array,  # (B, S, N, H)
+    k: jax.Array,  # (B, T, K, H)
+    v: jax.Array,
+    *,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Blockwise-over-queries attention: an XLA-level flash analogue.
+
+    Peak score memory is ``(B, K, G, block_q, T)`` instead of
+    ``(B, K, G, S, T)`` — the same bounded-working-set discipline the paper
+    applies to on-core buffers, needed for the 32k-sequence shapes.  Numerics
+    match :func:`_gqa_attend` exactly (each row's softmax sees its full T).
+    """
+    b, s, n, h = q.shape
+    t = k.shape[1]
+    bq = cfg.attn_chunk_q or 512
+    if s <= bq or s % bq != 0:
+        mask = causal_mask(s, window, q_offset)
+        return _gqa_attend(cfg, q, k, v, mask)
+    nb = s // bq
+    qb = jnp.moveaxis(q.reshape(b, nb, bq, n, h), 1, 0)  # (nb, B, bq, N, H)
+    kpos = jnp.arange(t)[None, :]
+
+    @jax.checkpoint
+    def block(i, qblk):
+        # remat per q-block: otherwise the scan's backward saves every
+        # block's (B, H_loc, bq, T) f32 score tensor (GBs per layer).
+        qpos = i * bq + jnp.arange(bq)[:, None] + q_offset
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        return _gqa_attend(cfg, qblk, k, v, mask)
+
+    def body(_, args):
+        i, qblk = args
+        return None, block(i, qblk)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nb), qb))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, n, h)
+
+
+def causal_mask(s: int, window: int = 0, offset: int = 0) -> jax.Array:
+    """(S, S+offset) causal (optionally banded) mask.  ``offset`` supports
+    attending over a prefix (queries start at position ``offset``)."""
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(s + offset)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# modes
+# ---------------------------------------------------------------------------
+
+def attention_train(
+    cfg: ModelConfig, p: Params, x: jax.Array, angles: Optional[jax.Array]
+) -> jax.Array:
+    """Full-sequence causal attention (training / scoring)."""
+    from repro.models import rope as _rope
+
+    q, k, v = _project_qkv(cfg, p, x)
+    if angles is not None:
+        q = _rope.apply_rope(q, angles)
+        k = _rope.apply_rope(k, angles)
+    window = cfg.window if cfg.attn_type == "swa" else 0
+    if cfg.attn_impl == "pallas" and window == 0:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=True)
+    elif cfg.attn_impl == "chunked":
+        out = _gqa_attend_chunked(cfg, q, k, v, window=window)
+    else:
+        mask = causal_mask(x.shape[1], window)
+        out = _gqa_attend(cfg, q, k, v, mask)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def _window_of(cfg: ModelConfig) -> int:
+    return cfg.window if (cfg.attn_type == "swa" or cfg.family == "hybrid") else 0
+
+
+def attention_prefill(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    angles: Optional[jax.Array],
+    cache: Params,
+) -> tuple[jax.Array, Params]:
+    """Causal attention over the prompt + populate the KV cache.
+
+    The prompt length S may exceed a windowed cache (W slots): only the last
+    W keys/values are retained, matching ring-buffer decode.
+    """
+    from repro.models import rope as _rope
+
+    q, k, v = _project_qkv(cfg, p, x)
+    if angles is not None:
+        q = _rope.apply_rope(q, angles)
+        k = _rope.apply_rope(k, angles)
+    window = _window_of(cfg)
+    if cfg.attn_impl == "pallas" and not window:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=True)
+    elif cfg.attn_impl == "chunked":
+        out = _gqa_attend_chunked(cfg, q, k, v, window=window)
+    else:
+        out = _gqa_attend(cfg, q, k, v, causal_mask(x.shape[1], window))
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+
+    s = x.shape[1]
+    cache_len = cache["k"].shape[1]
+    if "slot_pos" in cache:
+        # keep the last `cache_len` tokens, placed at their ring slots
+        take = min(s, cache_len)
+        positions = jnp.arange(s - take, s)
+        slots = positions % cache_len
+        new_k = cache["k"].at[:, slots].set(k[:, s - take :].astype(cache["k"].dtype))
+        new_v = cache["v"].at[:, slots].set(v[:, s - take :].astype(cache["v"].dtype))
+        slot_pos = cache["slot_pos"].at[slots].set(positions.astype(jnp.int32))
+        cache = {"k": new_k, "v": new_v, "slot_pos": slot_pos}
+    else:
+        take = min(s, cache_len)
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k[:, :take].astype(cache["k"].dtype), 0, axis=1
+        )
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v[:, :take].astype(cache["v"].dtype), 0, axis=1
+        )
+        cache = {"k": new_k, "v": new_v}
+    return out, cache
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, 1, D)
+    angles: Optional[jax.Array],  # (B, 1, H/2) for this position
+    cache: Params,
+    pos: jax.Array,  # scalar int32 — next position to write
+) -> tuple[jax.Array, Params]:
+    """One decode step with KV-cache append (ring for windowed archs)."""
+    from repro.models import rope as _rope
+
+    q, k, v = _project_qkv(cfg, p, x)
+    if angles is not None:
+        q = _rope.apply_rope(q, angles)
+        k = _rope.apply_rope(k, angles)
+
+    cache_len = cache["k"].shape[1]
+    if "slot_pos" in cache:
+        slot = jnp.mod(pos, cache_len)
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1
+        )
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1
+        )
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0
+        )
+        valid = (slot_pos >= 0) & (slot_pos >= pos - cache_len + 1) & (slot_pos <= pos)
+        new_cache = {"k": new_k, "v": new_v, "slot_pos": slot_pos}
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=1
+        )
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=1
+        )
+        valid = jnp.arange(cache_len) <= pos
+        new_cache = {"k": new_k, "v": new_v}
+
+    mask = valid[None, None, :]  # (1, 1, T) -> broadcast (B, S=1, T)
+    out = _gqa_attend(cfg, q, new_k.astype(q.dtype), new_v.astype(q.dtype), mask[0])
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache

@@ -1,0 +1,63 @@
+"""Stub modality frontends (per assignment: ``[audio]``/``[vlm]`` specify the
+transformer BACKBONE only; the modality frontend is a STUB whose outputs —
+precomputed frame/patch embeddings — arrive via ``input_specs()``).
+
+MusicGen: 4 EnCodec codebooks, each vocab 2048.  The *real* frontend
+(EnCodec) is stubbed; the token interface is faithful: per-step input
+embedding = sum of the K codebook embeddings; output = K parallel lm-heads.
+
+Qwen2-VL: vision tokens arrive as precomputed patch embeddings (B, S_img, D)
+from the stub ViT; a linear merger projects them into the LM embedding space
+and they are prepended to the text sequence.  M-RoPE 3-D position ids arrive
+alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import Params
+
+
+# -- audio (MusicGen) --------------------------------------------------------
+
+def init_audio_embed(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "codebooks": layers.trunc_normal(
+            ks[0], (cfg.n_codebooks, cfg.vocab_size, cfg.d_model), 0.02
+        ),
+        "heads": layers.fan_in_init(
+            ks[1], (cfg.n_codebooks, cfg.d_model, cfg.vocab_size), cfg.d_model
+        ),
+    }
+
+
+def audio_embed_apply(p: Params, codes: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """codes: (B, K, S) int32 -> (B, S, D): sum over codebook embeddings."""
+    emb = p["codebooks"].astype(dtype)  # (K, V, D)
+
+    # vmap over codebooks: emb[k][codes[:, k]] -> (B, S, D), summed over k
+    def one(k_emb, k_codes):
+        return k_emb[k_codes]
+
+    per_cb = jax.vmap(one, in_axes=(0, 1), out_axes=0)(emb, codes)  # (K,B,S,D)
+    return jnp.sum(per_cb, axis=0)
+
+
+def audio_heads_apply(p: Params, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, K, S, V)."""
+    return jnp.einsum("bsd,kdv->bksv", x, p["heads"].astype(x.dtype))
+
+
+# -- vision (Qwen2-VL) ---------------------------------------------------------
+
+def init_vision_merger(key: jax.Array, cfg: ModelConfig) -> Params:
+    return {"proj": layers.fan_in_init(key, (cfg.d_model, cfg.d_model), cfg.d_model)}
+
+
+def vision_merge_apply(p: Params, patch_embeds: jax.Array) -> jax.Array:
+    """(B, S_img, D) stub-ViT outputs -> LM space."""
+    return jnp.einsum("bsd,de->bse", patch_embeds, p["proj"].astype(patch_embeds.dtype))

@@ -1,0 +1,129 @@
+"""Shared neural blocks: norms, MLPs, embeddings.
+
+Pure-functional: ``init_*`` returns a param pytree, ``*_apply`` is pure.
+Compute dtype is bf16 (cast at block entry), accumulation/normalization f32.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key: jax.Array, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def fan_in_init(key: jax.Array, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fi = fan_in if fan_in is not None else shape[0]
+    return trunc_normal(key, shape, scale=fi ** -0.5, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key: jax.Array, d: int, norm_type: str) -> Params:
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    if norm_type == "layernorm_nonparam":  # OLMo: non-parametric LN
+        return {}
+    raise ValueError(f"unknown norm_type {norm_type!r}")
+
+
+def norm_apply(p: Params, x: jax.Array, norm_type: str, eps: float = 1e-6) -> jax.Array:
+    """Norm with f32 *statistics* but bf16 elementwise math.
+
+    Keeping the full-width tensor in compute dtype matters under
+    scan+remat: a full f32 upcast of x gets hoisted by XLA into the forward
+    loop and saved per layer (measured: a stacked (L,B,S,D) f32 residual =
+    12 GiB for 8 internlm2 layers).  f32 statistics preserve the numerics
+    that matter (mean/variance accumulation); the (B,S,1) stats are tiny.
+    """
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + eps).astype(x.dtype)
+        return y * p["scale"].astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True) - mu * mu
+    y = (x - mu.astype(x.dtype)) * jax.lax.rsqrt(
+        jnp.maximum(var, 0.0) + eps
+    ).astype(x.dtype)
+    if norm_type == "layernorm":
+        y = y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    return y
+
+
+def init_rms_head_norm(key: jax.Array, head_dim: int) -> Params:
+    """Per-head-dim RMSNorm for qk-norm (Qwen3)."""
+    return {"scale": jnp.ones((head_dim,), jnp.float32)}
+
+
+def head_norm_apply(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * p["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+GATED = {"swiglu", "geglu"}
+
+
+def init_mlp(key: jax.Array, d: int, f: int, mlp_type: str, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"wi": fan_in_init(k1, (d, f), d, dtype), "wo": fan_in_init(k2, (f, d), f, dtype)}
+    if mlp_type in GATED:
+        p["wg"] = fan_in_init(k3, (d, f), d, dtype)
+    return p
+
+
+def _act(h: jax.Array, mlp_type: str) -> jax.Array:
+    if mlp_type in ("swiglu",):
+        return jax.nn.silu(h)
+    if mlp_type in ("geglu", "gelu"):
+        return jax.nn.gelu(h)
+    if mlp_type == "relu2":  # Nemotron/Minitron squared ReLU
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(f"unknown mlp_type {mlp_type!r}")
+
+
+def mlp_apply(p: Params, x: jax.Array, mlp_type: str) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype))
+    h = _act(h, mlp_type)
+    if mlp_type in GATED:
+        h = h * jnp.einsum("...d,df->...f", x, p["wg"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# embeddings / output head
+# ---------------------------------------------------------------------------
+
+def init_embed(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"tok": trunc_normal(key, (vocab, d), 0.02, dtype)}
+
+
+def embed_apply(p: Params, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return p["tok"].astype(compute_dtype)[tokens]
+
+
+def init_head(key: jax.Array, d: int, vocab: int, dtype=jnp.float32) -> Params:
+    return {"out": fan_in_init(key, (d, v := vocab), d, dtype)}
+
+
+def head_apply(p: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", x, p["out"].astype(x.dtype))

@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training lowers the linear recurrence through ``jax.lax.associative_scan``
+(O(log S) depth); decode is the O(1) sequential update — which is what makes
+long_500k tractable for this family.  A Pallas chunked-scan kernel for the
+training path lives in ``repro.kernels.rglru_scan``.
+
+Block structure (Griffin): pre-norm -> {gate branch: linear+GeLU} x
+{recurrent branch: linear -> causal conv(4) -> RG-LRU} -> out proj.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import Params
+
+C_RGLRU = 8.0
+
+
+def init_rglru_block(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = exp(-c*softplus(L)) is in ~(0.9, 0.999) (paper app. A)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / C_RGLRU))  # softplus^-1(-log u / c)
+    return {
+        "w_in": layers.fan_in_init(ks[1], (d, w), d),
+        "w_gate": layers.fan_in_init(ks[2], (d, w), d),
+        "conv": layers.trunc_normal(ks[3], (cfg.conv_width, w), 0.02),
+        "w_a": layers.fan_in_init(ks[4], (w, w), w),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": layers.fan_in_init(ks[5], (w, w), w),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+        "w_out": layers.fan_in_init(ks[6], (w, d), w),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def _gates(p: Params, x: jax.Array):
+    """x: (..., W) -> (a, b) of the affine recurrence h = a*h + b, in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1: 1-a^2 = -expm1(2 log a)
+    b = jnp.sqrt(-jnp.expm1(2.0 * log_a)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(p: Params, x: jax.Array, h0: Optional[jax.Array] = None):
+    """Associative scan over the sequence.  x: (B, S, W) -> (y, h_last)."""
+    a, b = _gates(p, x)  # (B, S, W) f32
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p: Params, x: jax.Array, h: jax.Array):
+    """One decode step.  x: (B, W), h: (B, W) -> (y, h')."""
+    a, b = _gates(p, x[:, None, :])
+    hf = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return hf.astype(x.dtype), hf
+
+
+def _causal_conv(p: Params, x: jax.Array, prefix: Optional[jax.Array] = None):
+    """Depthwise causal conv, width cw.  x: (B, S, W); prefix: (B, cw-1, W)."""
+    cw = p["conv"].shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for j in range(cw):
+        out = out + xp[:, j : j + x.shape[1]] * p["conv"][j].astype(x.dtype)
+    return out, xp[:, -(cw - 1) :] if cw > 1 else prefix
+
+
+def rglru_block_train(
+    cfg: ModelConfig, p: Params, x: jax.Array, state: Optional[Params] = None,
+    use_kernel: bool = False,
+) -> tuple[jax.Array, Params]:
+    """Full-sequence application.  x: (B, S, D) -> (out, new_state)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"].astype(dt))
+    prefix = state["conv"] if state is not None else None
+    u, conv_state = _causal_conv(p, u, prefix)
+    h0 = state["h"] if state is not None else None
+    if use_kernel:
+        from repro.kernels.rglru_scan import ops as lru_ops
+
+        a, b = _gates(p, u)
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+        h = lru_ops.linear_recurrence(a, b)
+        y, h_last = h.astype(dt), h[:, -1]
+    else:
+        y, h_last = rglru_scan(p, u, h0)
+    out = jnp.einsum("bsw,wd->bsd", y * gate, p["w_out"].astype(dt))
+    new_state = {"h": h_last, "conv": conv_state.astype(jnp.float32)}
+    return out, new_state
+
+
+def rglru_block_step(
+    cfg: ModelConfig, p: Params, x: jax.Array, state: Params
+) -> tuple[jax.Array, Params]:
+    """One decode step.  x: (B, 1, D) -> (out (B,1,D), new_state)."""
+    dt = x.dtype
+    xs = x[:, 0]
+    gate = jax.nn.gelu(xs @ p["w_gate"].astype(dt))
+    u = xs @ p["w_in"].astype(dt)
+    # conv over the stored prefix + current input
+    cw = cfg.conv_width
+    hist = jnp.concatenate([state["conv"].astype(dt), u[:, None]], axis=1)  # (B, cw, W)
+    u_conv = jnp.einsum("bcw,cw->bw", hist, p["conv"].astype(dt))
+    y, h = rglru_step(p, u_conv, state["h"])
+    out = (y * gate) @ p["w_out"].astype(dt)
+    new_state = {"h": h, "conv": hist[:, 1:].astype(jnp.float32)}
+    return out[:, None], new_state

@@ -1,0 +1,67 @@
+"""Rotary position embeddings: standard RoPE, Qwen2-VL M-RoPE, sinusoidal.
+
+Conventions: rotate-half layout (x1 = x[..., :H/2], x2 = x[..., H/2:]), f32
+trig, applied per head.  M-RoPE (arXiv:2409.12191) splits the head_dim
+frequency bands into three sections (temporal, height, width) driven by 3-D
+position ids.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions (..., S) int -> angles (..., S, head_dim/2) f32."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x (B, S, N, H), angles (B, S, H/2) or (S, H/2) -> rotated x."""
+    if angles.ndim == 2:  # (S, H/2) -> broadcast batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)  # (B,S,1,H/2)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    h = x.shape[-1] // 2
+    x1, x2 = x[..., :h], x[..., h:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def mrope_angles(
+    positions_3d: jax.Array, head_dim: int, theta: float, sections: Sequence[int]
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions_3d: (B, 3, S) int — (temporal, height, width) ids; text tokens
+    carry identical ids in all three planes, image patches use their grid
+    coordinates.  ``sections`` gives the number of *frequency pairs* per plane
+    (sums to head_dim/2; Qwen2-VL: [16, 24, 24] for head_dim 128).
+    Returns (B, S, head_dim/2) angles.
+    """
+    if sum(sections) != head_dim // 2:
+        raise ValueError(f"sections {sections} must sum to head_dim/2={head_dim // 2}")
+    inv = rope_freqs(head_dim, theta)  # (H/2,)
+    # angles per plane: (B, 3, S, H/2)
+    ang = positions_3d.astype(jnp.float32)[..., None] * inv
+    # select plane per frequency band
+    plane = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=head_dim // 2
+    )  # (H/2,) in {0,1,2}
+    onehot = jax.nn.one_hot(plane, 3, dtype=jnp.float32)  # (H/2, 3)
+    return jnp.einsum("bpsh,hp->bsh", ang, onehot)
+
+
+def sinusoidal_embedding(positions: jax.Array, d_model: int, max_scale: float = 10000.0) -> jax.Array:
+    """Classic transformer sinusoidal absolute embedding: (..., S) -> (..., S, D)."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(max_scale) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

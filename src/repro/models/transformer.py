@@ -1,0 +1,622 @@
+"""Model assembly: decoder-only LM over every assigned architecture family.
+
+Pre-norm residual blocks; uniform-block archs are scanned over stacked
+``(L, ...)`` parameter leaves (small HLO + the hook the streaming prefetch
+engine attaches to); heterogeneous archs (hybrid / ssm) are **period-scanned**
+(each in-pattern position stacked over the repeating periods, scanned as a
+group, remainder layers unrolled — see ModelConfig.period_scan) or fully
+unrolled when the pattern doesn't repeat.
+
+Modes:
+  ``forward_train``  — full-sequence; returns logits (+ MoE aux loss);
+                       ``lm_loss`` adds the seq-chunked CE.
+  ``prefill``        — full-sequence + populated KV caches.
+  ``decode_step``    — one token, O(1)/O(window)/O(cache) per arch family.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, frontends, layers, moe, rglru, rope, xlstm
+from repro.models.layers import Params
+
+IGNORE_INDEX = -100
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key: jax.Array, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    if kind == "attn":
+        p: Params = {
+            "ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm_type),
+            "attn": attention.init_attention(ks[1], cfg),
+            "ln2": layers.init_norm(ks[2], cfg.d_model, cfg.norm_type),
+        }
+        if cfg.n_experts:
+            p["moe"] = moe.init_moe(ks[3], cfg)
+        elif cfg.d_ff:
+            p["mlp"] = layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+        return p
+    if kind == "rec":
+        return {
+            "ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm_type),
+            "rec": rglru.init_rglru_block(ks[1], cfg),
+            "ln2": layers.init_norm(ks[2], cfg.d_model, cfg.norm_type),
+            "mlp": layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_type),
+        }
+    if kind == "mlstm":
+        return {
+            "ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm_type),
+            "mlstm": xlstm.init_mlstm_block(ks[1], cfg),
+        }
+    if kind == "slstm":
+        return {
+            "ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm_type),
+            "slstm": xlstm.init_slstm_block(ks[1], cfg),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kl, kh, kv = jax.random.split(key, 4)
+    params: Params = {}
+    if cfg.n_codebooks:
+        params["embed"] = frontends.init_audio_embed(ke, cfg)
+    else:
+        params["embed"] = layers.init_embed(ke, cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["head"] = layers.init_head(kh, cfg.d_model, cfg.vocab_size)
+    if cfg.vision_embed:
+        params["vision"] = frontends.init_vision_merger(kv, cfg)
+    params["ln_f"] = layers.init_norm(kh, cfg.d_model, cfg.norm_type)
+
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    if cfg.uniform_blocks and cfg.use_scan:
+        blocks = [_init_block(lkeys[i], cfg, "attn") for i in range(cfg.n_layers)]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    elif cfg.period_scan:
+        # heterogeneous but periodic: stack each in-period position over the
+        # full periods (scan axis), keep the remainder layers unrolled
+        p = cfg.scan_period
+        n_full = cfg.n_layers // p
+        periods = {}
+        for k in range(p):
+            pos = [
+                _init_block(lkeys[j * p + k], cfg, cfg.block_kind(k))
+                for j in range(n_full)
+            ]
+            periods[f"pos_{k}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *pos)
+        blocks: Params = {"periods": periods}
+        for k in range(cfg.n_layers % p):
+            i = n_full * p + k
+            blocks[f"tail_{k}"] = _init_block(lkeys[i], cfg, cfg.block_kind(i))
+        params["blocks"] = blocks
+    else:
+        params["blocks"] = {
+            f"layer_{i:03d}": _init_block(lkeys[i], cfg, cfg.block_kind(i))
+            for i in range(cfg.n_layers)
+        }
+    return params
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, cl: int, dtype) -> Params:
+    if kind == "attn":
+        w = cfg.window if cfg.family == "hybrid" else cl
+        return attention.init_cache(cfg, batch, min(w or cl, cl) or cl, dtype)
+    if kind == "rec":
+        return rglru.init_rglru_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _stack_tree(n: int, tree: Params) -> Params:
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), tree
+    )
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Params:
+    """Decode-state pytree for a context of ``seq_len`` tokens."""
+    cl = cfg.cache_len(seq_len)
+    if cfg.uniform_blocks and cfg.use_scan:
+        return _stack_tree(cfg.n_layers, attention.init_cache(cfg, batch, cl, dtype))
+    if cfg.period_scan:
+        p = cfg.scan_period
+        n_full = cfg.n_layers // p
+        caches: Params = {
+            "periods": {
+                f"pos_{k}": _stack_tree(
+                    n_full, _init_layer_cache(cfg, cfg.block_kind(k), batch, cl, dtype)
+                )
+                for k in range(p)
+            }
+        }
+        for k in range(cfg.n_layers % p):
+            i = n_full * p + k
+            caches[f"tail_{k}"] = _init_layer_cache(cfg, cfg.block_kind(i), batch, cl, dtype)
+        return caches
+    return {
+        f"layer_{i:03d}": _init_layer_cache(cfg, cfg.block_kind(i), batch, cl, dtype)
+        for i in range(cfg.n_layers)
+    }
+
+
+# ---------------------------------------------------------------------------
+# block application (one layer)
+# ---------------------------------------------------------------------------
+
+def _block_train(cfg: ModelConfig, p: Params, x: jax.Array, angles, mesh=None, sharder=None):
+    kind = "attn"  # uniform path; heterogenous archs dispatch explicitly below
+    if sharder is not None:
+        p = sharder.block(p)  # explicit per-layer FSDP all-gather (ZeRO-3)
+    h = layers.norm_apply(p["ln1"], x, cfg.norm_type)
+    h = attention.attention_train(cfg, p["attn"], h, angles)
+    x = x + h
+    h = layers.norm_apply(p["ln2"], x, cfg.norm_type)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        if cfg.moe_impl == "sorted_ep" and mesh is not None:
+            h, aux = moe.moe_sorted_ep(cfg, p["moe"], h, mesh)
+        else:
+            h, aux = moe.moe_dispatch(cfg, p["moe"], h)
+    elif "mlp" in p:
+        h = layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+    else:
+        h = jnp.zeros_like(h)
+    x = x + h
+    if sharder is not None:
+        x = sharder.acts(x)
+    return x, aux
+
+
+def _hetero_block_train(cfg: ModelConfig, kind: str, p: Params, x, angles, state=None):
+    """Returns (x, new_state, moe_aux)."""
+    h = layers.norm_apply(p["ln1"], x, cfg.norm_type)
+    new_state = None
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        if state is not None:
+            h, new_state = attention.attention_prefill(cfg, p["attn"], h, angles, state)
+        else:
+            h = attention.attention_train(cfg, p["attn"], h, angles)
+    elif kind == "rec":
+        h, new_state = rglru.rglru_block_train(cfg, p["rec"], h, state)
+    elif kind == "mlstm":
+        h, new_state = xlstm.mlstm_block_train(cfg, p["mlstm"], h, state)
+    elif kind == "slstm":
+        h, new_state = xlstm.slstm_block_train(cfg, p["slstm"], h, state)
+    x = x + h
+    if "moe" in p:
+        h = layers.norm_apply(p["ln2"], x, cfg.norm_type)
+        h, aux = moe.moe_dispatch(cfg, p["moe"], h)
+        x = x + h
+    elif "mlp" in p:
+        h = layers.norm_apply(p["ln2"], x, cfg.norm_type)
+        x = x + layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+    return x, new_state, aux
+
+
+def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, angles, cache, pos):
+    h = layers.norm_apply(p["ln1"], x, cfg.norm_type)
+    if kind == "attn":
+        h, new_cache = attention.attention_decode(cfg, p["attn"], h, angles, cache, pos)
+    elif kind == "rec":
+        h, new_cache = rglru.rglru_block_step(cfg, p["rec"], h, cache)
+    elif kind == "mlstm":
+        h, new_cache = xlstm.mlstm_block_step(cfg, p["mlstm"], h, cache)
+    elif kind == "slstm":
+        h, new_cache = xlstm.slstm_block_step(cfg, p["slstm"], h, cache)
+    else:
+        raise ValueError(kind)
+    x = x + h
+    if kind in ("attn", "rec") and ("mlp" in p or "moe" in p):
+        h = layers.norm_apply(p["ln2"], x, cfg.norm_type)
+        if "moe" in p:
+            h, _ = moe.moe_dispatch(cfg, p["moe"], h)
+        else:
+            h = layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+        x = x + h
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding / positions / head
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params: Params, batch: dict, pos=None) -> jax.Array:
+    dt = cfg.compute_dtype
+    if cfg.n_codebooks:
+        x = frontends.audio_embed_apply(params["embed"], batch["codes"], dt)
+    else:
+        x = layers.embed_apply(params["embed"], batch["tokens"], dt)
+    if cfg.vision_embed and "vision_embeds" in batch:
+        vis = frontends.vision_merge_apply(
+            params["vision"], batch["vision_embeds"].astype(dt)
+        )
+        x = jnp.concatenate([vis, x], axis=1)  # vision prefix + text
+    if cfg.pos_type == "sinusoidal":
+        s = x.shape[1]
+        # decode passes the absolute position of its single token (a scalar);
+        # train/prefill start at 0
+        positions = (
+            jnp.arange(s)
+            if pos is None
+            else jnp.asarray(pos, jnp.int32)[None] + jnp.arange(s) - (s - 1)
+        )
+        x = x + rope.sinusoidal_embedding(positions, cfg.d_model)[None].astype(dt)
+    if getattr(cfg, "scale_embeddings", False):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return x
+
+
+def _angles(cfg: ModelConfig, batch: dict, seq_len: int, pos=None):
+    """RoPE angles for the whole sequence (train/prefill) or one step."""
+    if cfg.pos_type == "rope":
+        if pos is not None:
+            positions = jnp.asarray(pos)[None, None]  # (1,1)
+        else:
+            positions = jnp.arange(seq_len)[None]
+        return rope.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    if cfg.pos_type == "mrope":
+        p3d = batch["positions_3d"]
+        return rope.mrope_angles(p3d, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    return None
+
+
+def _head(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = layers.norm_apply(params["ln_f"], x, cfg.norm_type)
+    if cfg.n_codebooks:
+        logits = frontends.audio_heads_apply(params["embed"], x)
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"].astype(x.dtype))
+    else:
+        logits = layers.head_apply(params["head"], x)
+    cap = getattr(cfg, "logit_softcap", 0.0)
+    if cap:
+        logits = cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full"
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def forward_train(
+    cfg: ModelConfig, params: Params, batch: dict, mesh=None, sharder=None
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits, moe_aux_loss)."""
+    x, aux = forward_hidden(cfg, params, batch, mesh, sharder)
+    return _head(cfg, params, x), aux
+
+
+def forward_hidden(
+    cfg: ModelConfig, params: Params, batch: dict, mesh=None, sharder=None
+) -> tuple[jax.Array, jax.Array]:
+    """Trunk only: pre-head hidden states (B, S, D) + moe aux loss."""
+    x = _embed(cfg, params, batch)
+    if sharder is not None:
+        x = sharder.acts(x)
+    angles = _angles(cfg, batch, x.shape[1])
+
+    if cfg.uniform_blocks and cfg.use_scan:
+        def body(carry, p):
+            x, aux = carry
+            x, a = _block_train(cfg, p, x, angles, mesh, sharder)
+            return (x, aux + a), None
+
+        wrapped = _remat(cfg, body)
+        (x, aux), _ = jax.lax.scan(wrapped, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    elif cfg.period_scan:
+        aux = jnp.zeros((), jnp.float32)
+        period = cfg.scan_period
+
+        def period_body(x, pos_params):
+            for k in range(period):
+                pk = pos_params[f"pos_{k}"]
+                if sharder is not None:
+                    pk = sharder.block(pk, ("periods", f"pos_{k}"))
+                fn = _remat(cfg, functools.partial(_hetero_block_train, cfg, cfg.block_kind(k)))
+                x, _, _ = fn(pk, x, angles)
+                if sharder is not None:
+                    x = sharder.acts(x)
+            return x, None
+
+        x, _ = jax.lax.scan(period_body, x, params["blocks"]["periods"])
+        for k in range(cfg.n_layers % period):
+            i = (cfg.n_layers // period) * period + k
+            name = f"tail_{k}"
+            p = params["blocks"][name]
+            if sharder is not None:
+                p = sharder.block(p, (name,))
+            fn = _remat(cfg, functools.partial(_hetero_block_train, cfg, cfg.block_kind(i)))
+            x, _, _ = fn(p, x, angles)
+            if sharder is not None:
+                x = sharder.acts(x)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            kind = cfg.block_kind(i)
+            name = f"layer_{i:03d}"
+            p = params["blocks"][name]
+            if sharder is not None:
+                p = sharder.block(p, (name,))
+            fn = _remat(cfg, functools.partial(_hetero_block_train, cfg, kind))
+            x, _, a = fn(p, x, angles)
+            aux = aux + a
+            if sharder is not None:
+                x = sharder.acts(x)
+    return x, aux
+
+
+def prefill(
+    cfg: ModelConfig, params: Params, batch: dict, caches: Params, mesh=None, sharder=None
+) -> tuple[jax.Array, Params]:
+    """Full-sequence forward that also fills decode state.  Returns
+    (last-position logits, caches)."""
+    x = _embed(cfg, params, batch)
+    if sharder is not None:
+        x = sharder.acts(x)
+    angles = _angles(cfg, batch, x.shape[1])
+
+    if cfg.uniform_blocks and cfg.use_scan:
+        def body(x, pc):
+            p, cache = pc
+            if sharder is not None:
+                p = sharder.block(p)
+            h = layers.norm_apply(p["ln1"], x, cfg.norm_type)
+            h, new_cache = attention.attention_prefill(cfg, p["attn"], h, angles, cache)
+            x = x + h
+            h = layers.norm_apply(p["ln2"], x, cfg.norm_type)
+            if "moe" in p:
+                h, _ = moe.moe_dispatch(cfg, p["moe"], h)
+            elif "mlp" in p:
+                h = layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+            else:
+                h = jnp.zeros_like(h)
+            x = x + h
+            if sharder is not None:
+                x = sharder.acts(x)
+            return x, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    elif cfg.period_scan:
+        period = cfg.scan_period
+
+        def period_body(x, args):
+            pos_params, pos_caches = args
+            new_pos = {}
+            for k in range(period):
+                pk = pos_params[f"pos_{k}"]
+                if sharder is not None:
+                    pk = sharder.block(pk, ("periods", f"pos_{k}"))
+                x, st, _ = _hetero_block_train(
+                    cfg, cfg.block_kind(k), pk, x, angles, pos_caches[f"pos_{k}"]
+                )
+                if sharder is not None:
+                    x = sharder.acts(x)
+                new_pos[f"pos_{k}"] = st
+            return x, new_pos
+
+        x, new_periods = jax.lax.scan(
+            period_body, x, (params["blocks"]["periods"], caches["periods"])
+        )
+        new_caches = {"periods": new_periods}
+        for k in range(cfg.n_layers % period):
+            i = (cfg.n_layers // period) * period + k
+            name = f"tail_{k}"
+            p = params["blocks"][name]
+            if sharder is not None:
+                p = sharder.block(p, (name,))
+            x, st, _ = _hetero_block_train(cfg, cfg.block_kind(i), p, x, angles, caches[name])
+            if sharder is not None:
+                x = sharder.acts(x)
+            new_caches[name] = st
+    else:
+        new_caches = {}
+        for i in range(cfg.n_layers):
+            kind = cfg.block_kind(i)
+            name = f"layer_{i:03d}"
+            p = params["blocks"][name]
+            if sharder is not None:
+                p = sharder.block(p, (name,))
+            x, st, _ = _hetero_block_train(cfg, kind, p, x, angles, caches[name])
+            if sharder is not None:
+                x = sharder.acts(x)
+            new_caches[name] = st
+    logits = _head(cfg, params, x[:, -1:])
+    return logits, new_caches
+
+
+def decode_step(
+    cfg: ModelConfig, params: Params, batch: dict, caches: Params, pos: jax.Array, sharder=None
+) -> tuple[jax.Array, Params]:
+    """One decode step.  batch carries the new token(s); ``pos`` is the
+    absolute position being written (scalar int32).  Returns (logits, caches)."""
+    x = _embed(cfg, params, batch, pos=pos)
+    angles = _angles(cfg, batch, 1, pos=pos)
+    if cfg.pos_type == "mrope":
+        angles = _angles(cfg, batch, 1)  # positions_3d provided per-step
+
+    if cfg.uniform_blocks and cfg.use_scan and cfg.decode_cache_in_carry:
+        # §Perf variant: stacked caches ride in the carry and are updated
+        # in place per layer — XLA aliases the (donated) cache buffer through
+        # the loop instead of keeping xs + ys + update copies alive.
+        def body(carry, p):
+            x, caches_c, i = carry
+            layer_cache = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+                caches_c,
+            )
+            if sharder is not None:
+                p = sharder.block(p)
+            x, nc = _block_decode(cfg, "attn", p, x, angles, layer_cache, pos)
+            if sharder is not None:
+                x = sharder.acts(x)
+            caches_c = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), i, 0
+                ),
+                caches_c,
+                nc,
+            )
+            return (x, caches_c, i + 1), None
+
+        (x, new_caches, _), _ = jax.lax.scan(
+            body, (x, caches, jnp.zeros((), jnp.int32)), params["blocks"]
+        )
+    elif cfg.uniform_blocks and cfg.use_scan:
+        def body(x, pc):
+            p, cache = pc
+            if sharder is not None:
+                p = sharder.block(p)
+            x, nc = _block_decode(cfg, "attn", p, x, angles, cache, pos)
+            if sharder is not None:
+                x = sharder.acts(x)
+            return x, nc
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    elif cfg.period_scan:
+        period = cfg.scan_period
+
+        def period_body(x, args):
+            pos_params, pos_caches = args
+            new_pos = {}
+            for k in range(period):
+                pk = pos_params[f"pos_{k}"]
+                if sharder is not None:
+                    pk = sharder.block(pk, ("periods", f"pos_{k}"))
+                x, st = _block_decode(
+                    cfg, cfg.block_kind(k), pk, x, angles, pos_caches[f"pos_{k}"], pos
+                )
+                if sharder is not None:
+                    x = sharder.acts(x)
+                new_pos[f"pos_{k}"] = st
+            return x, new_pos
+
+        x, new_periods = jax.lax.scan(
+            period_body, x, (params["blocks"]["periods"], caches["periods"])
+        )
+        new_caches = {"periods": new_periods}
+        for k in range(cfg.n_layers % period):
+            i = (cfg.n_layers // period) * period + k
+            name = f"tail_{k}"
+            p = params["blocks"][name]
+            if sharder is not None:
+                p = sharder.block(p, (name,))
+            x, st = _block_decode(cfg, cfg.block_kind(i), p, x, angles, caches[name], pos)
+            if sharder is not None:
+                x = sharder.acts(x)
+            new_caches[name] = st
+    else:
+        new_caches = {}
+        for i in range(cfg.n_layers):
+            kind = cfg.block_kind(i)
+            name = f"layer_{i:03d}"
+            p = params["blocks"][name]
+            if sharder is not None:
+                p = sharder.block(p, (name,))
+            x, st = _block_decode(cfg, kind, p, x, angles, caches[name], pos)
+            if sharder is not None:
+                x = sharder.acts(x)
+            new_caches[name] = st
+    return _head(cfg, params, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over non-ignored targets.  Returns (loss, n_valid).
+
+    Sharding-friendly: the gold-logit gather is an iota-compare masked
+    reduction (not ``take_along_axis``), so a vocab-sharded logits tensor
+    stays sharded — GSPMD reduces partials instead of all-gathering the
+    full (B, S, V) tensor (measured: 67 GiB/dev -> in-budget on olmo-1b
+    train_4k; see EXPERIMENTS.md §Dry-run).
+    """
+    lf = logits.astype(jnp.float32)
+    valid = targets != IGNORE_INDEX
+    tgt = jnp.where(valid, targets, 0)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == tgt[..., None], lf, 0.0), axis=-1)
+    nll = (lse - gold) * valid
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / n, n
+
+
+def cross_entropy_sum(logits: jax.Array, targets: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sum-form CE (for chunked accumulation)."""
+    lf = logits.astype(jnp.float32)
+    valid = targets != IGNORE_INDEX
+    tgt = jnp.where(valid, targets, 0)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == tgt[..., None], lf, 0.0), axis=-1)
+    return jnp.sum((lse - gold) * valid), jnp.sum(valid)
+
+
+def lm_loss(
+    cfg: ModelConfig, params: Params, batch: dict, mesh=None, sharder=None
+) -> tuple[jax.Array, dict]:
+    targets = batch["targets"]
+    if cfg.vision_embed and "vision_embeds" in batch:
+        # vision prefix carries no LM targets
+        s_img = batch["vision_embeds"].shape[1]
+        pad = jnp.full(targets.shape[:1] + (s_img,), IGNORE_INDEX, targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+
+    s = targets.shape[-1]
+    c = cfg.loss_chunk
+    if not c or s <= c or s % c != 0:
+        logits, aux = forward_train(cfg, params, batch, mesh, sharder)
+        ce, n = cross_entropy(logits, targets)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux, "n_tokens": n}
+
+    # seq-chunked loss: the (B, S, V) logits tensor is never materialized —
+    # each chunk's logits are (re)computed inside a remat'd scan body
+    # (measured: minitron-4b train_4k 20.7 -> in-budget; V=256000 logits are
+    # the dominant temp for big-vocab archs).
+    x, aux = forward_hidden(cfg, params, batch, mesh, sharder)
+    nb = s // c
+    xs = jnp.moveaxis(x.reshape(x.shape[0], nb, c, x.shape[-1]), 1, 0)
+    ts = jnp.moveaxis(
+        targets.reshape(*targets.shape[:-1], nb, c), -2, 0
+    )  # (nb, ..., c)
+
+    @jax.checkpoint
+    def chunk(xc, tc):
+        logits = _head(cfg, params, xc)
+        return cross_entropy_sum(logits, tc)
+
+    def body(carry, args):
+        tot, n = carry
+        nll, nv = chunk(*args)
+        return (tot + nll, n + nv), None
+
+    (tot, n), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xs, ts))
+    n = jnp.maximum(n, 1)
+    ce = tot / n
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "n_tokens": n}

@@ -1,0 +1,375 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM — per head, stabilized exponential gating:
+    C_t = f'_t C_{t-1} + i'_t k_t v_t^T      (dk, dv) matrix memory
+    n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+with running stabilizer m_t = max(log f_t + m_{t-1}, log i_t),
+i'_t = exp(log i_t - m_t), f'_t = exp(log f_t + m_{t-1} - m_t).
+
+Training uses the **chunkwise-parallel form** (intra-chunk attention-like
+quadratic + inter-chunk recurrent state), sequence-linear overall — this is
+what makes train_4k tractable and long_500k decode O(1) state.  The
+sequential form (``mlstm_sequential``) is kept as the oracle for tests.
+
+sLSTM — scalar memory with recurrent state mixing (block-diagonal per-head
+recurrent matrices); inherently sequential, lowered via ``lax.scan``.
+
+Block wiring follows the paper's residual blocks: mLSTM block = up-proj x2
+(inner, gate) -> causal conv -> q/k/v (block-diagonal per head, qk at half
+width) -> cell -> per-head groupnorm -> gate -> down-proj.  sLSTM block =
+cell -> groupnorm -> gated MLP (pf = 4/3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import Params
+
+QK_FACTOR = 0.5  # official xLSTM qk_dim_factor
+
+
+def _dims(cfg: ModelConfig):
+    di = int(cfg.proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    dhin = di // nh
+    dqk = int(dhin * QK_FACTOR)
+    return di, nh, dhin, dqk
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, nh, dhin, dqk = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": layers.fan_in_init(ks[0], (d, 2 * di), d),
+        "conv": layers.trunc_normal(ks[1], (cfg.conv_width, di), 0.02),
+        "wq": layers.fan_in_init(ks[2], (nh, dhin, dqk), dhin),
+        "wk": layers.fan_in_init(ks[3], (nh, dhin, dqk), dhin),
+        "wv": layers.fan_in_init(ks[4], (nh, dhin, dhin), dhin),
+        "w_if": layers.fan_in_init(ks[5], (di, 2 * nh), di),
+        "b_i": jnp.full((nh,), -10.0, jnp.float32),  # small initial input gate
+        "b_f": jnp.full((nh,), 3.0, jnp.float32),  # forget-open init
+        "gn_scale": jnp.ones((nh, dhin), jnp.float32),
+        "w_down": layers.fan_in_init(ks[6], (nh, dhin, d), di),
+    }
+
+
+def init_slstm_block(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    fi = int(4 * d / 3)
+    ks = jax.random.split(key, 11)
+    p: Params = {"gn_scale": jnp.ones((d,), jnp.float32)}
+    for g, kk in zip(("z", "i", "f", "o"), ks[:4]):
+        p[f"w_{g}"] = layers.fan_in_init(kk, (d, d), d)
+    for g, kk in zip(("z", "i", "f", "o"), ks[4:8]):
+        p[f"r_{g}"] = layers.fan_in_init(kk, (nh, dh, dh), dh) * 0.1
+    p["b_z"] = jnp.zeros((d,), jnp.float32)
+    p["b_i"] = jnp.full((d,), -10.0, jnp.float32)
+    p["b_f"] = jnp.full((d,), 3.0, jnp.float32)
+    p["b_o"] = jnp.zeros((d,), jnp.float32)
+    p["mlp"] = layers.init_mlp(ks[8], d, fi, "swiglu")
+    return p
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Params:
+    di, nh, dhin, dqk = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, dqk, dhin), jnp.float32),
+        "n": jnp.zeros((batch, nh, dqk), jnp.float32),
+        "m": jnp.full((batch, nh), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Params:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — sequential oracle
+# ---------------------------------------------------------------------------
+
+def mlstm_sequential(q, k, v, log_i, log_f, state=None):
+    """Reference semantics.  q/k: (B,S,H,dqk), v: (B,S,H,dv),
+    log_i/log_f: (B,S,H) f32.  Returns (h (B,S,H,dv), state')."""
+    b, s, nh, dqk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        C = jnp.zeros((b, nh, dqk, dv), jnp.float32)
+        n = jnp.zeros((b, nh, dqk), jnp.float32)
+        m = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    else:
+        C, n, m = state["C"], state["n"], state["m"]
+    qf = q.astype(jnp.float32) * (dqk ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    def step(carry, t):
+        C, n, m = carry
+        li, lf = log_i[:, t], log_f[:, t]
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)
+        ip = jnp.exp(li - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * jnp.einsum(
+            "bhk,bhv->bhkv", kf[:, t], vf[:, t]
+        )
+        n = fp[..., None] * n + ip[..., None] * kf[:, t]
+        num = jnp.einsum("bhk,bhkv->bhv", qf[:, t], C)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", qf[:, t], n)), jnp.exp(-m_new)
+        )
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C, n, m), jnp.arange(s))
+    hs = jnp.moveaxis(hs, 0, 1)  # (B,S,H,dv)
+    return hs.astype(q.dtype), {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel (training path)
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk: int = 128):
+    """Chunkwise-parallel evaluation, identical semantics to
+    ``mlstm_sequential`` (up to float assoc.).  Complexity O(S*chunk) time,
+    O(S) memory; state carried across chunks in f32."""
+    b, s, nh, dqk = q.shape
+    dv = v.shape[-1]
+    if s % chunk != 0:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+    if state is None:
+        C0 = jnp.zeros((b, nh, dqk, dv), jnp.float32)
+        n0 = jnp.zeros((b, nh, dqk), jnp.float32)
+        m0 = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    ch = lambda x: x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+    qc = ch(q.astype(jnp.float32) * (dqk ** -0.5))  # (NC,B,L,H,dqk)
+    kc, vc = ch(k.astype(jnp.float32)), ch(v.astype(jnp.float32))
+    lic, lfc = ch(log_i), ch(log_f)  # (NC,B,L,H)
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]  # causal within chunk (incl diag)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # (B,H,dqk,dv), (B,H,dqk), (B,H)
+        qq, kk, vv, li, lf = xs
+        cum = jnp.cumsum(lf, axis=1)  # (B,L,H) inclusive cumsum of log f
+        # decay from chunk start to step t INCLUDING f_t: cum[t]
+        # intra-chunk log weights: D[t,s] = cum[t] - cum[s] + li[s]  (s <= t)
+        Dmat = cum[:, :, None, :] - cum[:, None, :, :] + li[:, None, :, :]
+        Dmat = jnp.where(tri[None, :, :, None], Dmat, -jnp.inf)  # (B,L,L,H)
+        m_intra = jnp.max(Dmat, axis=2)  # (B,L,H)
+        m_inter = cum + m[:, None, :]  # carried-state contribution
+        m_t = jnp.maximum(m_inter, m_intra)  # (B,L,H)
+        # intra scores
+        scores = jnp.einsum("blhk,bshk->blsh", qq, kk)
+        w = jnp.exp(Dmat - m_t[:, :, None, :])
+        sw = scores * w
+        num = jnp.einsum("blsh,bshv->blhv", sw, vv)
+        den = jnp.sum(sw, axis=2)  # (B,L,H)
+        # inter (carried state)
+        g = jnp.exp(m_inter - m_t)  # (B,L,H)
+        num = num + g[..., None] * jnp.einsum("blhk,bhkv->blhv", qq, C)
+        den = den + g * jnp.einsum("blhk,bhk->blh", qq, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state update to end of chunk --------------------------------
+        total = cum[:, -1]  # (B,H) total log decay of the chunk
+        # per-step weight into new state: total - cum[s] + li[s]
+        wS = total[:, None, :] - cum + li  # (B,L,H)
+        m_new = jnp.maximum(total + m, jnp.max(wS, axis=1))
+        scale_old = jnp.exp(total + m - m_new)
+        wSn = jnp.exp(wS - m_new[:, None, :])
+        C = scale_old[..., None, None] * C + jnp.einsum(
+            "blh,blhk,blhv->bhkv", wSn, kk, vv
+        )
+        n = scale_old[..., None] * n + jnp.einsum("blh,blhk->bhk", wSn, kk)
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    hs = hs.swapaxes(0, 1).reshape(b, s, nh, dv)
+    return hs.astype(q.dtype), {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """O(1) decode step.  q/k: (B,H,dqk), v: (B,H,dv), gates (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    dqk = q.shape[-1]
+    qf = q.astype(jnp.float32) * (dqk ** -0.5)
+    m_new = jnp.maximum(log_f + m, log_i)
+    fp = jnp.exp(log_f + m - m_new)
+    ip = jnp.exp(log_i - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = fp[..., None] * n + ip[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(q.dtype)
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkv_gates(cfg: ModelConfig, p: Params, u: jax.Array, uc: jax.Array):
+    """u (pre-conv), uc (post-conv+silu): (B,S,Di) -> q,k,v,(log_i,log_f)."""
+    di, nh, dhin, dqk = _dims(cfg)
+    bsz = u.shape[:-1]
+    uh = uc.reshape(*bsz, nh, dhin)
+    vh = u.reshape(*bsz, nh, dhin)
+    q = jnp.einsum("...hi,hik->...hk", uh, p["wq"].astype(u.dtype))
+    k = jnp.einsum("...hi,hik->...hk", uh, p["wk"].astype(u.dtype))
+    v = jnp.einsum("...hi,hiv->...hv", vh, p["wv"].astype(u.dtype))
+    gates = jnp.einsum("...i,ig->...g", uc.astype(jnp.float32), p["w_if"].astype(jnp.float32))
+    gi, gf = jnp.split(gates, 2, axis=-1)
+    log_i = gi + p["b_i"]
+    log_f = jax.nn.log_sigmoid(gf + p["b_f"])
+    return q, k, v, log_i, log_f
+
+
+def _groupnorm_heads(scale: jax.Array, h: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS groupnorm.  h: (..., H, dv)."""
+    hf = h.astype(jnp.float32)
+    hf = hf * jax.lax.rsqrt(jnp.mean(hf * hf, axis=-1, keepdims=True) + eps)
+    return (hf * scale).astype(h.dtype)
+
+
+def mlstm_block_train(
+    cfg: ModelConfig, p: Params, x: jax.Array, state: Optional[Params] = None
+) -> tuple[jax.Array, Params]:
+    """x: (B,S,D) -> (out, state')."""
+    from repro.models.rglru import _causal_conv
+
+    dt = x.dtype
+    up = jnp.einsum("bsd,du->bsu", x, p["w_up"].astype(dt))
+    u, z = jnp.split(up, 2, axis=-1)
+    prefix = state["conv"] if state is not None else None
+    uc, conv_state = _causal_conv({"conv": p["conv"]}, u, prefix)
+    uc = jax.nn.silu(uc)
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, u, uc)
+    cell_state = None
+    if state is not None:
+        cell_state = {"C": state["C"], "n": state["n"], "m": state["m"]}
+    h, new_cell = mlstm_chunkwise(
+        q, k, v, log_i, log_f, cell_state, chunk=min(cfg.mlstm_chunk, x.shape[1])
+    )
+    h = _groupnorm_heads(p["gn_scale"], h)
+    di, nh, dhin, _ = _dims(cfg)
+    zh = jax.nn.silu(z).reshape(*z.shape[:-1], nh, dhin)
+    out = jnp.einsum("bshv,hvd->bsd", h * zh, p["w_down"].astype(dt))
+    new_state = dict(new_cell, conv=conv_state.astype(jnp.float32))
+    return out, new_state
+
+
+def mlstm_block_step(
+    cfg: ModelConfig, p: Params, x: jax.Array, state: Params
+) -> tuple[jax.Array, Params]:
+    """x: (B,1,D) decode step."""
+    dt = x.dtype
+    xs = x[:, 0]
+    up = xs @ p["w_up"].astype(dt)
+    u, z = jnp.split(up, 2, axis=-1)
+    hist = jnp.concatenate([state["conv"].astype(dt), u[:, None]], axis=1)
+    uc = jax.nn.silu(jnp.einsum("bcw,cw->bw", hist, p["conv"].astype(dt)))
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, u, uc)
+    h, new_cell = mlstm_step(
+        q, k, v, log_i, log_f, {"C": state["C"], "n": state["n"], "m": state["m"]}
+    )
+    h = _groupnorm_heads(p["gn_scale"], h)
+    di, nh, dhin, _ = _dims(cfg)
+    zh = jax.nn.silu(z).reshape(-1, nh, dhin)
+    out = jnp.einsum("bhv,hvd->bd", h * zh, p["w_down"].astype(dt))
+    new_state = dict(new_cell, conv=hist[:, 1:].astype(jnp.float32))
+    return out[:, None], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_cell_step(cfg: ModelConfig, p: Params, xt: jax.Array, st: Params):
+    """One sLSTM step.  xt: (B, D) f32 gate pre-activations computed here."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    hprev = st["h"].reshape(-1, nh, dh)
+
+    def gate(name):
+        wx = xt @ p[f"w_{name}"].astype(jnp.float32)
+        rh = jnp.einsum("bhi,hij->bhj", hprev, p[f"r_{name}"].astype(jnp.float32))
+        return wx + rh.reshape(-1, d) + p[f"b_{name}"]
+
+    z = jnp.tanh(gate("z"))
+    li = gate("i")  # log input gate (exp gating)
+    lf = jax.nn.log_sigmoid(gate("f"))
+    o = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(lf + st["m"], li)
+    fp = jnp.exp(lf + st["m"] - m_new)
+    ip = jnp.exp(li - m_new)
+    c = fp * st["c"] + ip * z
+    n = fp * st["n"] + ip
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_block_train(
+    cfg: ModelConfig, p: Params, x: jax.Array, state: Optional[Params] = None
+) -> tuple[jax.Array, Params]:
+    b, s, d = x.shape
+    st = state
+    if st is None:
+        st = init_slstm_state(cfg, b)
+    cell = {k: st[k] for k in ("h", "c", "n", "m")}
+
+    def step(carry, xt):
+        new = _slstm_cell_step(cfg, p, xt, carry)
+        return new, new["h"]
+
+    cell, hs = jax.lax.scan(step, cell, x.astype(jnp.float32).swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1)  # (B,S,D)
+    nh = cfg.n_heads
+    dh = d // nh
+    hn = _groupnorm_heads(
+        p["gn_scale"].reshape(nh, dh), hs.reshape(b, s, nh, dh)
+    ).reshape(b, s, d).astype(x.dtype)
+    out = layers.mlp_apply(p["mlp"], hn, "swiglu")
+    return out, cell
+
+
+def slstm_block_step(
+    cfg: ModelConfig, p: Params, x: jax.Array, state: Params
+) -> tuple[jax.Array, Params]:
+    b = x.shape[0]
+    d = cfg.d_model
+    cell = {k: state[k] for k in ("h", "c", "n", "m")}
+    new = _slstm_cell_step(cfg, p, x[:, 0].astype(jnp.float32), cell)
+    nh = cfg.n_heads
+    dh = d // nh
+    hn = _groupnorm_heads(
+        p["gn_scale"].reshape(nh, dh), new["h"].reshape(b, nh, dh)
+    ).reshape(b, d).astype(x.dtype)
+    out = layers.mlp_apply(p["mlp"], hn, "swiglu")
+    return out[:, None], new

@@ -1,0 +1,84 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+At 2+ pods the gradient all-reduce crosses data-center network, which is
+~10-25x slower than ICI — compressing that traffic is a standard
+distributed-optimization trick.  Two codecs:
+
+  * ``bf16``  — cast f32 grads to bf16 for the reduce (2x), no state.
+  * ``int8``  — per-leaf max-abs scaling to int8 (4x) with **error
+    feedback**: the quantization residual is carried and added to the next
+    step's gradient, which keeps SGD/Adam convergence (Karimireddy et al.).
+
+Codecs are value-level (jit-compatible); the explicit cross-pod psum wiring
+lives in the shard_map training variant.  Property tests check
+``decode(encode(g)) + error == g`` exactly for the tracked residual.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def compress_bf16(grads: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def init_error_state(grads: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_int8(
+    grads: Pytree, error: Optional[Pytree] = None
+) -> tuple[Pytree, Pytree, Pytree]:
+    """Returns (int8 payload, scales, new error state)."""
+
+    def leaf(g, e):
+        gf = g.astype(jnp.float32) + (e if e is not None else 0.0)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        err = gf - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    if error is None:
+        error = jax.tree.map(lambda _: None, grads, is_leaf=lambda x: x is None)
+        flat_e = [None] * len(jax.tree.leaves(grads))
+    else:
+        flat_e = jax.tree.leaves(error)
+    flat_g, treedef = jax.tree.flatten(grads)
+    qs, scales, errs = zip(*(leaf(g, e) for g, e in zip(flat_g, flat_e)))
+    return (
+        treedef.unflatten(list(qs)),
+        treedef.unflatten(list(scales)),
+        treedef.unflatten(list(errs)),
+    )
+
+
+def decompress_int8(payload: Pytree, scales: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, payload, scales
+    )
+
+
+def pod_allreduce_int8(grads: Pytree, axis: str, error: Pytree) -> tuple[Pytree, Pytree]:
+    """int8-compressed psum over ``axis`` (use under shard_map).
+
+    Each pod contributes int8; the sum happens in int32 (no overflow for
+    <= 2^23 pods) and is rescaled by the max scale (conservative)."""
+    q, scales, err = compress_int8(grads, error)
+    summed = jax.tree.map(
+        lambda x: jax.lax.psum(x.astype(jnp.int32), axis), q
+    )
+    n = jax.lax.psum(1, axis)
+    max_scale = jax.tree.map(lambda s: jax.lax.pmax(s, axis), scales)
+    out = jax.tree.map(
+        lambda si, s: si.astype(jnp.float32) * s / n, summed, max_scale
+    )
+    return out, err

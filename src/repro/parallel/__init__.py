@@ -1,0 +1,19 @@
+from repro.parallel.sharding import (
+    ShardingPlan,
+    batch_spec,
+    batch_specs,
+    cache_specs_tree,
+    make_plan,
+    opt_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "ShardingPlan",
+    "make_plan",
+    "param_specs",
+    "opt_state_specs",
+    "batch_spec",
+    "batch_specs",
+    "cache_specs_tree",
+]

@@ -1,0 +1,8 @@
+from repro.roofline.hw import V5E
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    cost_terms,
+    roofline_report,
+)
+
+__all__ = ["V5E", "cost_terms", "collective_bytes_from_hlo", "roofline_report"]

@@ -1,0 +1,10 @@
+from repro.runtime.driver import TrainDriver, DriverConfig
+from repro.runtime.elastic import elastic_mesh_shape
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = [
+    "TrainDriver",
+    "DriverConfig",
+    "elastic_mesh_shape",
+    "StragglerMonitor",
+]

@@ -1,0 +1,41 @@
+"""Elastic re-meshing: resume a job on a different device count.
+
+Checkpoints store unsharded leaves (see ``repro.checkpoint``), so elasticity
+reduces to choosing a new mesh and re-deriving shardings from the same
+logical rules.  Policy: keep the model axis (TP degree is an architectural
+choice — it must divide heads/ffn), shrink/grow the data axis; drop the pod
+axis when only one pod survives.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def elastic_mesh_shape(
+    n_devices: int,
+    *,
+    model: int = 16,
+    prefer_pods: bool = True,
+    pod_size: Optional[int] = None,
+) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest (pod, data, model) shape that fits ``n_devices``.
+
+    >>> elastic_mesh_shape(512, model=16)      # healthy 2-pod job
+    ((2, 16, 16), ('pod', 'data', 'model'))
+    >>> elastic_mesh_shape(480, model=16)      # lost 2 hosts (8 chips each)
+    ((30, 16), ('data', 'model'))
+    >>> elastic_mesh_shape(256, model=16)
+    ((16, 16), ('data', 'model'))
+    """
+    if n_devices % model != 0:
+        raise ValueError(f"{n_devices} devices not divisible by model={model}")
+    rest = n_devices // model
+    if prefer_pods and pod_size:
+        chips_per_pod = pod_size
+        if n_devices % chips_per_pod == 0 and n_devices // chips_per_pod > 1:
+            pods = n_devices // chips_per_pod
+            data = chips_per_pod // model
+            return (pods, data, model), ("pod", "data", "model")
+    if prefer_pods and rest % 16 == 0 and rest // 16 > 1:
+        return (rest // 16, 16, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")

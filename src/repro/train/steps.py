@@ -1,0 +1,101 @@
+"""Step functions: train / prefill / decode, built per (config, optimizer).
+
+These are the functions the launcher jits with the sharding plan's
+in/out-shardings and that the dry-run lowers for every (arch x shape x mesh)
+cell.  All of them are pure: ``(state..., batch) -> (state..., outputs)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+Pytree = Any
+
+
+def make_train_step(
+    cfg: ModelConfig, opt_cfg: AdamWConfig, mesh=None, sharder=None
+) -> Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree, dict]]:
+    """``(params, opt_state, batch) -> (params, opt_state, metrics)``."""
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(transformer.lm_loss, argnums=1, has_aux=True)(
+            cfg, params, batch, mesh, sharder
+        )
+        if sharder is not None:
+            grads = sharder.grads(grads)  # ZeRO grad layout (see Sharder.grads)
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, grads, opt_state, compute_dtype=cfg.compute_dtype
+        )
+        metrics = {"loss": loss, **aux, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(
+    cfg: ModelConfig, batch_size: int, seq_len: int, mesh=None, sharder=None
+) -> Callable[[Pytree, Pytree], tuple[jax.Array, Pytree]]:
+    """``(params, batch) -> (last-token logits, caches)``.
+
+    Caches are created inside the step (zeros) so the step's out-shardings
+    place them; context length is the shape's ``seq_len``.
+    """
+
+    def prefill_step(params, batch):
+        caches = transformer.init_caches(cfg, batch_size, seq_len, cfg.compute_dtype)
+        return transformer.prefill(cfg, params, batch, caches, mesh, sharder)
+
+    return prefill_step
+
+
+def make_decode_step(
+    cfg: ModelConfig, mesh=None, sharder=None
+) -> Callable[[Pytree, Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]]:
+    """``(params, caches, batch, pos) -> (logits, caches)`` — one new token
+    against a populated decode state (KV cache / recurrent state)."""
+
+    def decode_step(params, caches, batch, pos):
+        return transformer.decode_step(cfg, params, batch, caches, pos, sharder)
+
+    return decode_step
+
+
+def init_train_state(
+    key: jax.Array, cfg: ModelConfig
+) -> tuple[Pytree, Pytree]:
+    """(bf16 params, AdamW state with f32 master) for a fresh run."""
+    from repro.optim.adamw import adamw_init
+
+    params_f32 = transformer.init_model(key, cfg)
+    opt_state = adamw_init(params_f32)
+    params = jax.tree.map(lambda p: p.astype(cfg.compute_dtype), params_f32)
+    return params, opt_state
+
+
+def abstract_train_state(cfg: ModelConfig) -> tuple[Pytree, Pytree]:
+    """ShapeDtypeStruct pytrees of (params, opt_state) — no allocation."""
+    def build():
+        return init_train_state(jax.random.PRNGKey(0), cfg)
+
+    return jax.eval_shape(build)
+
+
+def abstract_params(cfg: ModelConfig) -> Pytree:
+    def build():
+        p = transformer.init_model(jax.random.PRNGKey(0), cfg)
+        return jax.tree.map(lambda x: x.astype(cfg.compute_dtype), p)
+
+    return jax.eval_shape(build)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, seq_len: int) -> Pytree:
+    return jax.eval_shape(
+        lambda: transformer.init_caches(cfg, batch, seq_len, cfg.compute_dtype)
+    )

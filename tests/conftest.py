@@ -1,0 +1,14 @@
+"""Test configuration.  NOTE: no XLA_FLAGS device-count override here —
+smoke tests must see the real (1-device) backend; only the dry-run uses
+512 placeholder devices (in its own process).
+"""
+import os
+
+# keep CPU tests deterministic and fast
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,150 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True).
+
+Sweeps shapes and dtypes per kernel; every PrefetchSpec setting must be
+value-identical (the paper's §3.1 correctness invariant).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.refspec import PrefetchSpec
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.streamed_matmul import matmul_ref, streamed_matmul
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# streamed matmul
+# ---------------------------------------------------------------------------
+
+MM_SHAPES = [(128, 256, 128), (64, 100, 200), (7, 384, 512), (1, 128, 128), (130, 130, 130)]
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_streamed_matmul_matches_oracle(m, k, n, dt):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), dt)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), dt)
+    ref = np.asarray(matmul_ref(x, w), np.float32)
+    out = streamed_matmul(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref, **_tol(dt))
+
+
+@pytest.mark.parametrize("dist,slots", [(0, 1), (1, 2), (2, 3), (3, 4), (1, 4)])
+def test_streamed_matmul_prefetch_invariance(dist, slots):
+    """Paper §3.1: prefetch settings never change the value."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 192), jnp.float32)
+    base = streamed_matmul(x, w, spec=PrefetchSpec(1, 1, 0))
+    out = streamed_matmul(x, w, spec=PrefetchSpec(slots, 1, dist))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+def test_streamed_matmul_batched_dims():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 32, 96), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 64), jnp.float32)
+    out = streamed_matmul(x, w)
+    ref = matmul_ref(x.reshape(-1, 96), w).reshape(2, 3, 32, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (B, S, T, N, KH, H, window, q_offset)
+    (2, 128, 128, 4, 4, 64, 0, 0),
+    (1, 256, 256, 8, 2, 64, 0, 0),
+    (2, 128, 128, 4, 1, 128, 0, 0),
+    (1, 256, 256, 4, 2, 64, 64, 0),
+    (1, 100, 100, 4, 4, 64, 0, 0),
+    (2, 64, 192, 4, 2, 64, 0, 128),
+    (1, 128, 128, 10, 5, 64, 0, 0),
+    (1, 128, 128, 4, 2, 256, 96, 0),
+]
+
+
+@pytest.mark.parametrize("b,s,t,n,kh,h,window,qo", FA_CASES)
+def test_flash_attention_matches_oracle(b, s, t, n, kh, h, window, qo):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, n, h), jnp.float32) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, kh, h), jnp.float32) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, kh, h), jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, window=window, q_offset=qo)
+    out = flash_attention(q, k, v, causal=True, window=window, q_offset=qo,
+                          block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dt):
+    b, s, n, kh, h = 1, 128, 4, 2, 64
+    q = (jax.random.normal(jax.random.PRNGKey(0), (b, s, n, h)) * 0.5).astype(dt)
+    k = (jax.random.normal(jax.random.PRNGKey(1), (b, s, kh, h)) * 0.5).astype(dt)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kh, h)).astype(dt)
+    ref = np.asarray(attention_ref(q, k, v), np.float32)
+    out = np.asarray(flash_attention(q, k, v), np.float32)
+    np.testing.assert_allclose(out, ref, **_tol(dt))
+
+
+def test_flash_attention_block_size_invariance():
+    b, s, n, kh, h = 1, 256, 4, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, n, h)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kh, h)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kh, h))
+    a = flash_attention(q, k, v, block_q=32, block_kv=64)
+    bb = flash_attention(q, k, v, block_q=128, block_kv=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DA_CASES = [
+    (2, 512, 4, 4, 64, [512, 300]),
+    (2, 1024, 8, 2, 64, [1, 777]),
+    (1, 300, 4, 1, 128, [300]),
+    (2, 2048, 8, 4, 128, [2048, 100]),
+    (1, 256, 10, 5, 64, [129]),
+]
+
+
+@pytest.mark.parametrize("b,t,n,kh,h,lens", DA_CASES)
+def test_decode_attention_matches_oracle(b, t, n, kh, h, lens):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, n, h), jnp.float32) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, kh, h), jnp.float32) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, kh, h), jnp.float32)
+    lengths = jnp.asarray(lens, jnp.int32)
+    ref = decode_attention_ref(q, k, v, lengths)
+    out = decode_attention(q, k, v, lengths, block_kv=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dist,slots", [(0, 1), (1, 2), (3, 4)])
+def test_decode_attention_prefetch_invariance(dist, slots):
+    b, t, n, kh, h = 2, 512, 4, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, n, h)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, kh, h)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, kh, h))
+    lengths = jnp.asarray([512, 77], jnp.int32)
+    base = decode_attention(q, k, v, lengths, spec=PrefetchSpec(1, 1, 0))
+    out = decode_attention(q, k, v, lengths, spec=PrefetchSpec(slots, 1, dist))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+def test_decode_attention_matches_flash_single_token():
+    """Cross-kernel: decode(q1) == flash(full prefix)[:, -1]."""
+    b, t, n, kh, h = 1, 256, 4, 2, 64
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q_full = jax.random.normal(keys[0], (b, t, n, h)) * 0.5
+    k = jax.random.normal(keys[1], (b, t, kh, h)) * 0.5
+    v = jax.random.normal(keys[2], (b, t, kh, h))
+    full = flash_attention(q_full, k, v, causal=True)
+    one = decode_attention(q_full[:, -1], k, v, jnp.asarray([t], jnp.int32))
+    np.testing.assert_allclose(np.asarray(one), np.asarray(full[:, -1]), rtol=1e-4, atol=2e-4)

@@ -1,0 +1,50 @@
+"""Paper §3.3 memory-model tests: local-copy preference, write-through,
+pool eviction."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.localcopy import LocalCopyCache
+
+
+def test_read_prefers_local_copy():
+    """paper: `tmp = a; a = tmp * a` — second access hits the local copy."""
+    c = LocalCopyCache()
+    c.register("a", np.arange(8.0, dtype=np.float32))
+    tmp = c.read("a")
+    again = c.read("a")
+    assert c.stats == {"hits": 1, "misses": 1, "evictions": 0, "writebacks": 0}
+    np.testing.assert_array_equal(np.asarray(tmp), np.asarray(again))
+
+
+def test_write_through_updates_home_and_local():
+    c = LocalCopyCache()
+    c.register("a", np.ones(4, np.float32))
+    a = c.read("a")
+    c.write("a", a * 3.0)
+    # home updated (write-through) ...
+    np.testing.assert_array_equal(c.home("a"), np.full(4, 3.0, np.float32))
+    # ... and subsequent reads hit the updated local copy
+    np.testing.assert_array_equal(np.asarray(c.read("a")), np.full(4, 3.0, np.float32))
+    assert c.stats["writebacks"] == 1
+    assert c.stats["misses"] == 1  # the write did not invalidate
+
+
+def test_capacity_eviction_like_central_pool():
+    """paper: 'locally held copies of data elsewhere ... are freed'."""
+    c = LocalCopyCache(capacity_bytes=3 * 16 * 4)  # 3 x (16 f32)
+    for i in range(5):
+        c.register(f"v{i}", np.full(16, float(i), np.float32))
+        c.read(f"v{i}")
+    assert c.stats["evictions"] >= 2
+    # evicted entries re-fetch from home, values intact
+    v0 = c.read("v0")
+    np.testing.assert_array_equal(np.asarray(v0), np.zeros(16, np.float32))
+
+
+def test_invalidate_forces_refetch():
+    c = LocalCopyCache()
+    c.register("a", np.zeros(4, np.float32))
+    c.read("a")
+    c.invalidate("a")
+    c.read("a")
+    assert c.stats["misses"] == 2

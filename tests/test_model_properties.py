@@ -1,0 +1,149 @@
+"""Property tests on model invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.configs import get_smoke_config
+from repro.models import rope, transformer
+from repro.roofline.analysis import (
+    _shape_bytes,
+    collective_bytes_from_hlo,
+    weighted_collective_bytes,
+)
+
+
+# ---------------------------------------------------------------------------
+# causality: tokens at position > i never affect logits at position i
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mixtral-8x7b", "recurrentgemma-2b", "xlstm-1.3b"])
+def test_causality(arch):
+    cfg = get_smoke_config(arch)
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    b, s, cut = 1, 16, 8
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (b, s), 1, cfg.vocab_size)
+    toks2 = toks.at[:, cut:].set((toks[:, cut:] + 7) % cfg.vocab_size)
+    l1, _ = transformer.forward_train(cfg, params, {"tokens": toks})
+    l2, _ = transformer.forward_train(cfg, params, {"tokens": toks2})
+    np.testing.assert_allclose(
+        np.asarray(l1[:, :cut], np.float32),
+        np.asarray(l2[:, :cut], np.float32),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+# ---------------------------------------------------------------------------
+# incremental decoding == one-shot prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "recurrentgemma-2b"])
+def test_prefill_then_decode_matches_longer_prefill(arch):
+    cfg = get_smoke_config(arch)
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 10
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 1, cfg.vocab_size)
+
+    # path A: prefill all s tokens
+    ca = transformer.init_caches(cfg, b, s + 2)
+    la, _ = transformer.prefill(cfg, params, {"tokens": toks}, ca)
+
+    # path B: prefill s-1 then decode token s-1
+    cb = transformer.init_caches(cfg, b, s + 2)
+    _, cb = transformer.prefill(cfg, params, {"tokens": toks[:, :-1]}, cb)
+    lb, _ = transformer.decode_step(
+        cfg, params, {"tokens": toks[:, -1:]}, cb, jnp.asarray(s - 1, jnp.int32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(la, np.float32), np.asarray(lb, np.float32), rtol=0.1, atol=0.15
+    )
+
+
+# ---------------------------------------------------------------------------
+# loss chunking is semantics-preserving (any divisor chunk)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(chunk=hst.sampled_from([4, 8, 16, 32]))
+def test_loss_chunk_invariance(chunk):
+    cfg = get_smoke_config("olmo-1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(3), (2, 32), 1, cfg.vocab_size),
+        "targets": jax.random.randint(jax.random.PRNGKey(4), (2, 32), 1, cfg.vocab_size),
+    }
+    l0, _ = transformer.lm_loss(dataclasses.replace(cfg, loss_chunk=0), params, batch)
+    l1, _ = transformer.lm_loss(dataclasses.replace(cfg, loss_chunk=chunk), params, batch)
+    assert abs(float(l0) - float(l1)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# RoPE: rotation preserves norms; relative-position property
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 64))
+    angles = rope.rope_angles(jnp.arange(8)[None], 64, 10_000.0)
+    qr = rope.apply_rope(q, angles)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(qr), axis=-1),
+        np.linalg.norm(np.asarray(q), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_relative_position():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    h = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (h,))
+    k = jax.random.normal(jax.random.PRNGKey(1), (h,))
+
+    def dot_at(i, j):
+        a = rope.rope_angles(jnp.asarray([[i]]), h, 10_000.0)
+        b = rope.rope_angles(jnp.asarray([[j]]), h, 10_000.0)
+        qr = rope.apply_rope(q[None, None, None], a)[0, 0, 0]
+        kr = rope.apply_rope(k[None, None, None], b)[0, 0, 0]
+        return float(jnp.dot(qr, kr))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(7, 0) - dot_at(17, 10)) < 1e-4
+
+
+def test_mrope_sections_cover_head_dim():
+    cfg = get_smoke_config("qwen2-vl-72b")
+    assert sum(cfg.mrope_sections) == cfg.head_dim // 2
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser (roofline input)
+# ---------------------------------------------------------------------------
+
+_FAKE_HLO = """
+  %ag = bf16[16,512]{1,0} all-gather(%p0), replica_groups=...
+  %ar = f32[4,4]{1,0} all-reduce(%x), to_apply=%add
+  %ags = (bf16[8,8], bf16[8,8]) all-gather-start(%p1)
+  %agd = bf16[64,64]{1,0} all-gather-done(%ags)
+  %a2a = bf16[2,2]{1,0} all-to-all(%y)
+  %cp = s32[10]{0} collective-permute(%z)
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_parser_classes_and_bytes():
+    got = collective_bytes_from_hlo(_FAKE_HLO)
+    assert got["all-gather"] == 16 * 512 * 2 + 64 * 64 * 2  # plain + done
+    assert got["all-reduce"] == 4 * 4 * 4
+    assert got["all-to-all"] == 2 * 2 * 2
+    assert got["collective-permute"] == 10 * 4
+    w = weighted_collective_bytes(got)
+    assert w == got["all-gather"] + 2 * got["all-reduce"] + got["all-to-all"] + got["collective-permute"]
+
+
+@given(hst.sampled_from(["f32[2,3]", "bf16[128]", "s8[4,4,4]", "pred[7]", "f32[]"]))
+def test_shape_bytes_parser(tok):
+    sizes = {"f32[2,3]": 24, "bf16[128]": 256, "s8[4,4,4]": 64, "pred[7]": 7, "f32[]": 4}
+    assert _shape_bytes(tok) == sizes[tok]
