@@ -14,16 +14,31 @@ import numpy as np
 RESULTS_DIR = Path("results/bench")
 
 
-def timed(fn: Callable[[], Any], *, repeats: int = 3, warmup: int = 1) -> dict:
-    """Median wall time of fn() (block_until_ready'd)."""
+def timed(
+    fn: Callable[[], Any], *, repeats: int = 3, warmup: int = 1, stats: Any = None
+) -> dict:
+    """Median wall time of fn() (block_until_ready'd).
+
+    ``stats`` (e.g. a ``StreamStats``) is ``reset()`` after the warmup runs,
+    so its counters afterwards cover *exactly* the ``repeats`` timed runs —
+    callers divide by ``stats.n_runs`` (== repeats) for per-run numbers
+    instead of guessing the repeat structure.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn())
+    if stats is not None:
+        stats.reset()
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         ts.append(time.perf_counter() - t0)
-    return {"median_s": float(np.median(ts)), "min_s": min(ts), "max_s": max(ts)}
+    return {
+        "median_s": float(np.median(ts)),
+        "min_s": min(ts),
+        "max_s": max(ts),
+        "repeats": repeats,
+    }
 
 
 def save_rows(name: str, rows: list[dict]) -> Path:

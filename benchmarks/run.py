@@ -14,6 +14,7 @@ SUITES = {
     "table1": ("benchmarks.power_model", "paper Table 1: throughput/power"),
     "table2": ("benchmarks.transfer_stall", "paper Table 2: stall vs transfer size"),
     "kernels": ("benchmarks.kernel_streaming", "kernel-level DMA schedule study"),
+    "engine": ("benchmarks.engine_compare", "coalesced transfer engine vs seed per-leaf schedule"),
 }
 
 

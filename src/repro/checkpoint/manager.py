@@ -146,10 +146,19 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = self.dir / f"step_{step:08d}"
+        meta = json.loads((d / "meta.json").read_text())
+        dtypes = {leaf["name"]: leaf["dtype"] for leaf in meta["leaves"]}
         names = [n for n, _ in _flatten(template)]
         leaves = []
         for name in names:
-            leaves.append(np.load(d / f"{name}.npy"))
+            arr = np.load(d / f"{name}.npy")
+            if arr.dtype.kind == "V":
+                # extension dtypes (bfloat16, fp8) serialize as raw void in
+                # npy; re-view them through the dtype recorded in meta.json
+                import jax.numpy as jnp
+
+                arr = arr.view(jnp.dtype(dtypes[name]))
+            leaves.append(arr)
         tree = jax.tree.unflatten(jax.tree.structure(template), leaves)
         if shardings is not None:
             tree = jax.tree.map(

@@ -19,9 +19,16 @@ from repro.core.memkind import (
     place,
     sharding_for,
 )
+from repro.core.engine import (
+    AdaptiveDistance,
+    EngineConfig,
+    LinkModel,
+    PAPER_EPIPHANY_LINK,
+    TransferEngine,
+)
 from repro.core.offload import offload
 from repro.core.prefetch import eager_transfer, fetch_chunk, stream_blocks, streamed_scan
-from repro.core.refspec import Access, OffloadRef, PrefetchSpec
+from repro.core.refspec import AUTO, Access, OffloadRef, PrefetchSpec
 from repro.core.hoststream import HostStreamExecutor, StreamStats
 from repro.core.localcopy import LocalCopyCache
 
@@ -44,6 +51,12 @@ __all__ = [
     "OffloadRef",
     "PrefetchSpec",
     "Access",
+    "AUTO",
+    "TransferEngine",
+    "EngineConfig",
+    "AdaptiveDistance",
+    "LinkModel",
+    "PAPER_EPIPHANY_LINK",
     "streamed_scan",
     "stream_blocks",
     "fetch_chunk",

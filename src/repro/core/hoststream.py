@@ -3,12 +3,15 @@
 The paper's architecture (§4, Fig 2) keeps bulk data on the host; a host-side
 service decodes references and feeds per-core channels (32 x 1KB cells) while
 device code computes.  This module is the direct analogue at framework level:
-model state stays **outside the XLA program** as host arrays; the driver
-issues asynchronous ``jax.device_put`` transfers for layer-group ``i+distance``
-while the jitted apply for group ``i`` runs.  Because transfers and compute
-are separate dispatches, this engine runs on *every* backend — including the
-CPU container, where it produces the real measurements behind EXPERIMENTS.md
-§Bench (the graph engine in ``prefetch.py`` is the production TPU path).
+model state stays **outside the XLA program** as host arrays; a background
+:class:`~repro.core.engine.TransferEngine` (the host service) coalesces,
+stages and issues the H2D transfer for layer-group ``i+distance`` while the
+jitted apply for group ``i`` runs.  Because transfers and compute are
+separate dispatches, this engine runs on *every* backend — including the
+CPU container, where it produces the real measurements behind
+``benchmarks/offload_modes.py`` and ``benchmarks/engine_compare.py``
+(``results/bench/BENCH_engine.json``; the graph engine in ``prefetch.py``
+is the production TPU path).
 
 Three transfer schedules, mirroring the paper's evaluation axes:
 
@@ -17,26 +20,43 @@ Three transfer schedules, mirroring the paper's evaluation axes:
                (paper's pass-by-reference without prefetch — the 21-25x
                slowdown case when transfers are small).
 ``prefetch``   keep ``distance`` groups in flight ahead of compute.
+               ``PrefetchSpec(distance="auto")`` lets the engine's
+               :class:`~repro.core.engine.AdaptiveDistance` controller size
+               the window from observed stalls.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Callable, Optional, Sequence
 
 import jax
 
+from repro.core.engine import AdaptiveDistance, EngineConfig, TransferEngine
 from repro.core.refspec import Access, PrefetchSpec
 
 __all__ = ["StreamStats", "HostStreamExecutor"]
 
 Pytree = Any
 
+#: histogram bucket upper bounds (seconds) for per-group transfer waits
+_WAIT_BINS = (10e-6, 100e-6, 1e-3, 10e-3, 100e-3)
+
+#: cap on retained per-group samples (waits, distance trace)
+_MAX_SAMPLES = 4096
+
 
 @dataclasses.dataclass
 class StreamStats:
-    """Per-run accounting (the paper's Table 2 instrumentation)."""
+    """Per-run accounting (the paper's Table 2 instrumentation).
+
+    ``n_transfers`` counts *logical* group transfers (one per group per
+    direction — the seed's unit, kept for continuity); ``h2d_requests`` /
+    ``d2h_requests`` count the *actual* requests issued on the link, which
+    is what the paper's on-demand penalty scales with.  With coalescing a
+    group is one request regardless of its leaf count.
+    """
 
     mode: str = "prefetch"
     n_transfers: int = 0
@@ -45,9 +65,57 @@ class StreamStats:
     transfer_wait_s: float = 0.0  # time the *compute* path blocked on data
     compute_s: float = 0.0
     total_s: float = 0.0
+    # -- engine-era accounting ----------------------------------------------
+    h2d_requests: int = 0
+    d2h_requests: int = 0
+    n_groups: int = 0
+    n_runs: int = 0
+    writeback_drain_s: float = 0.0
+    #: per-group compute-thread stall (the wait histogram's raw samples);
+    #: bounded so a stats object shared across a long training run does not
+    #: grow with step count — old samples age out, aggregates stay exact
+    wait_per_group: "deque[float]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=_MAX_SAMPLES)
+    )
+    #: prefetch window size used for each group (adaptive-distance trace)
+    distance_trace: "deque[int]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=_MAX_SAMPLES)
+    )
+
+    @property
+    def requests_per_group(self) -> float:
+        return self.h2d_requests / self.n_groups if self.n_groups else 0.0
+
+    def wait_hist(self, bins: Sequence[float] = _WAIT_BINS) -> dict[str, int]:
+        """Per-group wait histogram: bucket label -> count."""
+        counts = [0] * (len(bins) + 1)
+        for w in self.wait_per_group:
+            for j, ub in enumerate(bins):
+                if w <= ub:
+                    counts[j] += 1
+                    break
+            else:
+                counts[-1] += 1
+        labels = [f"<={ub:.0e}s" for ub in bins] + [f">{bins[-1]:.0e}s"]
+        return dict(zip(labels, counts))
+
+    def reset(self) -> None:
+        """Zero all counters (keeps ``mode``) — one benchmark repeat."""
+        mode = self.mode
+        fresh = StreamStats(mode=mode)
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(fresh, f.name))
 
     def as_row(self) -> dict[str, Any]:
-        return dataclasses.asdict(self)
+        row = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if f.name not in ("wait_per_group", "distance_trace")
+        }
+        row["requests_per_group"] = self.requests_per_group
+        row["wait_hist"] = self.wait_hist()
+        row["final_distance"] = self.distance_trace[-1] if self.distance_trace else None
+        return row
 
 
 def _nbytes(tree: Pytree) -> int:
@@ -64,8 +132,14 @@ class HostStreamExecutor:
         ``(carry, group) -> (carry, group_out)`` with ``writeback=True`` —
         the paper's ``rw`` access modifier, used e.g. for streamed optimizer
         state which must be copied back to its home kind).
-    device_sharding:
-        optional pytree of shardings for the staged groups.
+    device_shardings:
+        optional pytree of shardings for the staged groups (disables
+        coalescing — the per-leaf path honours explicit placements).
+    engine / engine_config:
+        the transfer engine to run on.  By default a private engine with
+        ``EngineConfig()`` (coalescing + async writeback) is created;
+        pass ``EngineConfig(coalesce=False, async_writeback=False)`` to
+        reproduce the seed executor's per-leaf blocking schedule.
     """
 
     def __init__(
@@ -74,16 +148,36 @@ class HostStreamExecutor:
         *,
         writeback: bool = False,
         device_shardings: Optional[Pytree] = None,
+        engine: Optional[TransferEngine] = None,
+        engine_config: Optional[EngineConfig] = None,
     ) -> None:
         self._apply = apply
         self._writeback = writeback
         self._shardings = device_shardings
+        self._engine = engine or TransferEngine(engine_config)
+        self._owns_engine = engine is None
+        #: adaptive-distance state, persistent across run() calls
+        self._controller: Optional[AdaptiveDistance] = None
+
+    @property
+    def engine(self) -> TransferEngine:
+        return self._engine
+
+    def close(self) -> None:
+        if self._owns_engine:
+            self._engine.close()
+
+    def __enter__(self) -> "HostStreamExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- transfer primitive (the paper's channel cell write) ----------------
-    def _put(self, group: Pytree) -> Pytree:
-        if self._shardings is not None:
-            return jax.device_put(group, self._shardings)
-        return jax.device_put(group)
+    def _submit(self, index: int, group: Pytree):
+        return self._engine.submit_group(
+            index, group, device_shardings=self._shardings
+        )
 
     def run(
         self,
@@ -100,52 +194,89 @@ class HostStreamExecutor:
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "prefetch" and prefetch is None:
             prefetch = PrefetchSpec()
-        distance = 0 if mode != "prefetch" else max(prefetch.distance, 1)
         st = stats if stats is not None else StreamStats()
         st.mode = mode
+        st.n_runs += 1
+        st.n_groups += len(groups)
+        cfg = self._engine.config
+        if self._writeback and cfg.async_writeback:
+            # a failed previous run may have left tickets behind; stale
+            # groups must never drain into this run's outputs
+            self._engine.discard_writebacks()
+        controller: Optional[AdaptiveDistance] = None
+        if mode != "prefetch":
+            distance = 0
+        elif prefetch.is_auto:
+            # the controller persists across run() calls: the train loop
+            # issues one short run per step, and the learned window must
+            # carry over instead of restarting at the minimum every step
+            if self._controller is None:
+                self._controller = AdaptiveDistance(
+                    initial=cfg.min_distance,
+                    min_distance=cfg.min_distance,
+                    max_distance=cfg.max_distance,
+                    wait_eps_s=cfg.wait_eps_s,
+                    shrink_after=cfg.shrink_after,
+                )
+            controller = self._controller
+            distance = controller.distance
+        else:
+            distance = max(prefetch.distance, 1)
         t_start = time.perf_counter()
 
-        outs: list = [] if self._writeback else None
+        outs: Optional[list] = [] if self._writeback else None
         n = len(groups)
 
         if mode == "eager":
             # bulk transfer first — the paper's original kernel invocation
-            staged = []
-            for grp in groups:
-                buf = self._put(grp)
+            futs = []
+            for i, grp in enumerate(groups):
+                fut = self._submit(i, grp)
                 st.n_transfers += 1
-                st.bytes_h2d += _nbytes(grp)
-                staged.append(buf)
+                st.h2d_requests += fut.n_requests
+                st.bytes_h2d += fut.nbytes
+                futs.append(fut)
+            for fut in futs:
+                w = fut.wait()
+                st.transfer_wait_s += w
+                st.wait_per_group.append(w)
             t0 = time.perf_counter()
-            jax.block_until_ready(staged)
-            st.transfer_wait_s += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            for buf in staged:
-                carry = self._step(carry, buf, outs, st)
+            for fut in futs:
+                carry = self._step(carry, fut.group(), outs, st)
             jax.block_until_ready(carry)
             st.compute_s += time.perf_counter() - t0
         else:
-            inflight: "OrderedDict[int, Pytree]" = OrderedDict()
+            inflight: "OrderedDict[int, Any]" = OrderedDict()
             issued = 0
             for i in range(n):
                 # top up the pipeline to `distance` groups ahead
                 while issued <= min(i + distance, n - 1):
-                    inflight[issued] = self._put(groups[issued])
+                    fut = self._submit(issued, groups[issued])
                     st.n_transfers += 1
-                    st.bytes_h2d += _nbytes(groups[issued])
+                    st.h2d_requests += fut.n_requests
+                    st.bytes_h2d += fut.nbytes
+                    inflight[issued] = fut
                     issued += 1
-                buf = inflight.pop(i)
-                if mode == "on_demand":
-                    # the paper's blocking fetch: core stalls until data lands
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(buf)
-                    st.transfer_wait_s += time.perf_counter() - t0
+                fut = inflight.pop(i)
+                # the paper's blocking fetch: the core stalls until data
+                # lands (zero once the window covers the link latency)
+                w = fut.wait()
+                st.transfer_wait_s += w
+                st.wait_per_group.append(w)
+                st.distance_trace.append(distance)
+                if controller is not None:
+                    distance = controller.observe(w)
                 t0 = time.perf_counter()
-                carry = self._step(carry, buf, outs, st)
+                carry = self._step(carry, fut.group(), outs, st)
                 st.compute_s += time.perf_counter() - t0
             t0 = time.perf_counter()
             jax.block_until_ready(carry)
             st.compute_s += time.perf_counter() - t0
+
+        if self._writeback and self._engine.config.async_writeback:
+            t0 = time.perf_counter()
+            outs = self._engine.drain_writebacks()
+            st.writeback_drain_s += time.perf_counter() - t0
 
         st.total_s = time.perf_counter() - t_start
         return (carry, outs) if self._writeback else (carry, None)
@@ -153,10 +284,24 @@ class HostStreamExecutor:
     def _step(self, carry: Pytree, buf: Pytree, outs: Optional[list], st: StreamStats) -> Pytree:
         if self._writeback:
             carry, group_out = self._apply(carry, buf)
-            host_out = jax.device_get(group_out)  # write back to home kind
             st.bytes_d2h += _nbytes(group_out)
             st.n_transfers += 1
-            outs.append(host_out)
+            if self._engine.config.async_writeback:
+                # pipelined writeback: D2H runs on the engine worker while
+                # the next group computes; drained in order after the loop
+                ticket = self._engine.submit_writeback(len(outs), group_out)
+                st.d2h_requests += ticket.n_requests
+                outs.append(None)  # placeholder — replaced by drain
+            else:
+                host_out = jax.device_get(group_out)  # blocking (seed path)
+                n_leaves = len(jax.tree.leaves(group_out))
+                # the blocking copy occupies the same (possibly emulated)
+                # link as the worker's transfers — and the compute thread
+                self._engine.emulate_blocking_transfer(
+                    n_leaves, _nbytes(group_out)
+                )
+                st.d2h_requests += n_leaves
+                outs.append(host_out)
         else:
             carry = self._apply(carry, buf)
         return carry

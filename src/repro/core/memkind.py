@@ -38,6 +38,8 @@ __all__ = [
     "HOST_PARAMS",
     "HOST_ALL",
     "backend_memory_kinds",
+    "backend_kind_string",
+    "default_memory_kind",
     "host_offload_supported",
     "resolve_kind",
     "sharding_for",
@@ -104,9 +106,11 @@ _KIND_BY_NAME = {
 }
 
 
-def as_kind(kind: "MemKind | str") -> MemKind:
+def as_kind(kind: "MemKind | str | None") -> MemKind:
     if isinstance(kind, MemKind):
         return kind
+    if kind is None:  # backend-default placement reads back as no kind
+        return DEVICE
     try:
         return _KIND_BY_NAME[kind]
     except KeyError:
@@ -123,6 +127,43 @@ def backend_memory_kinds() -> tuple[str, ...]:
         return tuple(m.kind for m in dev.addressable_memories())
     except Exception:  # pragma: no cover - very old backends
         return ("device",)
+
+
+@functools.cache
+def default_memory_kind() -> Optional[str]:
+    """The backend's default memory kind string (None if unqueryable)."""
+    try:
+        return jax.devices()[0].default_memory().kind
+    except Exception:  # pragma: no cover
+        return None
+
+
+_warned_kinds: set = set()
+
+
+def backend_kind_string(jax_kind: str) -> Optional[str]:
+    """Map a logical jax memory-kind string onto one this backend accepts.
+
+    Backends differ in what they enumerate (TPU: ``device`` + ``pinned_host``;
+    some CPU builds: only ``unpinned_host``).  A kind the backend does not
+    enumerate maps to ``None`` — the backend default memory — which is the
+    physically correct tier on a single-memory backend (it *is* its own host
+    and device tier).  Mapping a *host* kind to the default on a multi-tier
+    backend loses the placement, so that case warns once per kind.
+    """
+    if jax_kind in backend_memory_kinds():
+        return jax_kind
+    if jax_kind != "device" and jax_kind not in _warned_kinds:
+        _warned_kinds.add(jax_kind)
+        import warnings
+
+        warnings.warn(
+            f"memory kind {jax_kind!r} is not enumerated by this backend "
+            f"({backend_memory_kinds()}); placing at the backend default "
+            "memory instead",
+            stacklevel=3,
+        )
+    return None
 
 
 @functools.cache
@@ -176,9 +217,15 @@ def sharding_for(
     *,
     allow_fallback: bool = True,
 ) -> NamedSharding:
-    """NamedSharding at a given hierarchy level."""
+    """NamedSharding at a given hierarchy level.
+
+    ``allow_fallback=False`` (lowering-only paths, e.g. the dry-run) keeps
+    the requested kind string verbatim so the true placement reaches the
+    StableHLO — and fails loudly if the backend cannot express it.
+    """
     kind = resolve_kind(kind, allow_fallback=allow_fallback)
-    return NamedSharding(mesh, spec, memory_kind=kind.jax_kind)
+    mk_str = backend_kind_string(kind.jax_kind) if allow_fallback else kind.jax_kind
+    return NamedSharding(mesh, spec, memory_kind=mk_str)
 
 
 def place(tree: Any, mesh: Mesh, specs: Any, kind: "MemKind | str" = DEVICE) -> Any:

@@ -33,8 +33,10 @@ import inspect
 from typing import Any, Callable, Mapping, Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec
 
+from repro import jaxcompat
 from repro.core import memkind as mk
 from repro.core import prefetch as pf
 from repro.core.refspec import OffloadRef
@@ -44,9 +46,7 @@ __all__ = ["offload"]
 
 def _default_mesh() -> Mesh:
     dev = jax.devices()
-    return jax.make_mesh(
-        (len(dev),), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    return jaxcompat.make_mesh((len(dev),), ("data",))
 
 
 class OffloadedFunction:
@@ -79,6 +79,8 @@ class OffloadedFunction:
         if unknown:
             raise ValueError(f"refs for unknown arguments: {sorted(unknown)}")
         self._compiled: dict[Any, Callable] = {}
+        #: host-stream executors, one per streamed-arg set (see stream_host)
+        self._stream_host_cache: dict[tuple, "HostStreamExecutor"] = {}
 
     # -- placement helpers ---------------------------------------------------
     def mesh(self) -> Mesh:
@@ -178,6 +180,81 @@ class OffloadedFunction:
     def eager(self, *args: Any, **kwargs: Any) -> Any:
         """Paper's original eager-copy invocation (bulk transfer, then run)."""
         return self._call(False, *args, **kwargs)
+
+    def stream_host(
+        self,
+        *args: Any,
+        mode: str = "prefetch",
+        engine: Any = None,
+        stats: Any = None,
+        **kwargs: Any,
+    ) -> Any:
+        """Run with streamed refs served by the *host-side* transfer engine.
+
+        Where ``__call__`` streams inside the compiled program (the graph
+        engine — static ring, fixed distance), this path is the paper's §4
+        runtime architecture: streamed arguments stay host-resident numpy,
+        a background :class:`~repro.core.engine.TransferEngine` coalesces
+        and prefetches blocks ahead of the jitted per-block apply, and the
+        block outputs write back to the host kind (``rw``).  It honours
+        ``PrefetchSpec(distance="auto")`` (runtime-adaptive window) and is
+        numerically identical to ``__call__``/``eager``.
+
+        The executor (jitted per-block apply + engine worker) is cached per
+        streamed-arg set; ``engine`` therefore binds on the first call for
+        a given set.  Call :meth:`close` to release the workers.
+        """
+        from repro.core.hoststream import HostStreamExecutor
+
+        bound = self._signature.bind(*args, **kwargs)
+        bound.apply_defaults()
+        stream_names = [n for n in self._params if self._ref(n).streamed]
+        if not stream_names:
+            return self(*args, **kwargs)
+        spec = self._ref(stream_names[0]).prefetch
+        g = spec.elements_per_fetch
+        fixed = {
+            n: v if isinstance(v, jax.Array) else self.place(n, v)
+            for n, v in bound.arguments.items()
+            if n not in stream_names
+        }
+        streamed_vals = {n: bound.arguments[n] for n in stream_names}
+        n_rows = jax.tree.leaves(streamed_vals[stream_names[0]])[0].shape[0]
+        if n_rows % g != 0:
+            raise ValueError(
+                f"leading axis {n_rows} not divisible by elements_per_fetch={g}"
+            )
+
+        # the executor (and its jitted per-block apply + engine worker) is
+        # built once per streamed-arg set and reused across calls; the fixed
+        # arguments travel in the carry, so new values don't retrace
+        key = tuple(stream_names)
+        ex = self._stream_host_cache.get(key)
+        if ex is None:
+            base = self._fn
+
+            @jax.jit
+            def apply(carry, block):
+                return carry, base(**carry, **dict(zip(stream_names, block)))
+
+            ex = HostStreamExecutor(apply, writeback=True, engine=engine)
+            self._stream_host_cache[key] = ex
+
+        groups = [
+            tuple(
+                jax.tree.map(lambda a: a[i : i + g], streamed_vals[n])
+                for n in stream_names
+            )
+            for i in range(0, n_rows, g)
+        ]
+        _, outs = ex.run(fixed, groups, mode=mode, prefetch=spec, stats=stats)
+        return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *outs)
+
+    def close(self) -> None:
+        """Shut down any host-stream executors (and their engine workers)."""
+        for ex in self._stream_host_cache.values():
+            ex.close()
+        self._stream_host_cache.clear()
 
     def lower(self, *args: Any, streamed: bool = True):
         """Lower without executing (dry-run path; keeps true memory kinds)."""

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import memkind as mk
+from repro.core.engine import static_auto_distance
 from repro.core.refspec import PrefetchSpec
 
 __all__ = [
@@ -147,7 +148,10 @@ def streamed_scan(
         y = jax.tree.map(lambda *xs: jnp.stack(xs), *ys) if ys[0] is not None else None
         return carry, y
 
-    d = min(prefetch.distance, max(n_chunks - 1, 0))
+    # "auto" cannot adapt inside a compiled scan (the ring shape is static);
+    # resolve it to a fixed head start once, at trace time
+    d = min(prefetch.numeric_distance(static_auto_distance(n_chunks)),
+            max(n_chunks - 1, 0))
 
     if d == 0:
         # --- on-demand: fetch in the critical path of every chunk -----------

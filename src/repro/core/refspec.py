@@ -14,13 +14,16 @@ them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 from jax.sharding import PartitionSpec
 
 from repro.core import memkind as mk
 
-__all__ = ["Access", "PrefetchSpec", "OffloadRef"]
+__all__ = ["Access", "PrefetchSpec", "OffloadRef", "AUTO"]
+
+#: sentinel for runtime-tuned prefetch distance (engine.AdaptiveDistance)
+AUTO = "auto"
 
 
 class Access:
@@ -45,6 +48,10 @@ class PrefetchSpec:
     distance
         how many chunks ahead transfers are issued.  ``0`` degenerates to the
         paper's *on-demand* mode (synchronous fetch at use time).
+        ``"auto"`` defers the choice to the runtime: the host-stream engine
+        adapts the window from observed stalls
+        (:class:`repro.core.engine.AdaptiveDistance`); the compiled graph
+        engine resolves it to a static head start at trace time.
     access
         ``'ro'`` — no write-back; ``'rw'`` — written chunks are copied back to
         the home memory kind (atomically per chunk, in order per device).
@@ -52,7 +59,7 @@ class PrefetchSpec:
 
     buffer_size: int = 2
     elements_per_fetch: int = 1
-    distance: int = 1
+    distance: Union[int, str] = 1
     access: str = Access.READ_ONLY
 
     def __post_init__(self) -> None:
@@ -60,19 +67,30 @@ class PrefetchSpec:
             raise ValueError("buffer_size must be >= 1")
         if self.elements_per_fetch < 1:
             raise ValueError("elements_per_fetch must be >= 1")
-        if self.distance < 0:
+        if isinstance(self.distance, str):
+            if self.distance != AUTO:
+                raise ValueError(f"distance must be an int >= 0 or 'auto', got {self.distance!r}")
+        elif self.distance < 0:
             raise ValueError("distance must be >= 0")
         if self.access not in (Access.READ_ONLY, Access.READ_WRITE):
             raise ValueError(f"access must be 'ro' or 'rw', got {self.access!r}")
-        if self.distance >= self.buffer_size + self.elements_per_fetch:
+        if not self.is_auto and self.distance >= self.buffer_size + self.elements_per_fetch:
             raise ValueError(
                 "distance must be < buffer_size + elements_per_fetch "
                 f"(got distance={self.distance}, buffer_size={self.buffer_size})"
             )
 
     @property
+    def is_auto(self) -> bool:
+        return self.distance == AUTO
+
+    @property
     def on_demand(self) -> bool:
         return self.distance == 0
+
+    def numeric_distance(self, default: int = 1) -> int:
+        """The static distance, with ``"auto"`` resolved to ``default``."""
+        return default if self.is_auto else int(self.distance)
 
 
 ON_DEMAND = PrefetchSpec(buffer_size=1, elements_per_fetch=1, distance=0)

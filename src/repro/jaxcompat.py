@@ -1,0 +1,50 @@
+"""Tolerance layer for JAX API differences across the versions this repo
+meets in the wild (container CPU builds vs current TPU releases).
+
+Centralises every version-sensitive call site so the rest of the codebase
+uses one spelling:
+
+* ``make_mesh`` — ``axis_types=(AxisType.Auto, ...)`` exists only on newer
+  JAX; older builds take no ``axis_types`` argument (and have no explicit
+  auto/manual axis distinction, which is the same default).
+* ``tpu_compiler_params`` — ``pltpu.CompilerParams`` was renamed from
+  ``pltpu.TPUCompilerParams``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+__all__ = ["make_mesh", "tpu_compiler_params"]
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with ``AxisType.Auto`` axes when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes,
+                axis_names,
+                devices=devices,
+                axis_types=(axis_type.Auto,) * len(axis_names),
+            )
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct Pallas-TPU compiler params under either class name."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

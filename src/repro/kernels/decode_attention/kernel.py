@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.jaxcompat import tpu_compiler_params
+
+from repro.core.engine import static_auto_distance
 from repro.core.refspec import PrefetchSpec
 
 NEG_INF = -1e30
@@ -135,13 +138,15 @@ def decode_attention_p(
     t = k.shape[1]
     assert t % block_kv == 0, (t, block_kv)
     n_t = t // block_kv
-    slots = max(spec.buffer_size, spec.distance + 1, 1)
+    # static VMEM ring: "auto" resolves to a fixed head start at trace time
+    distance = spec.numeric_distance(static_auto_distance(n_t))
+    slots = max(spec.buffer_size, distance + 1, 1)
 
     kernel = functools.partial(
         _decode_kernel,
         block_kv=block_kv,
         n_t=n_t,
-        distance=spec.distance,
+        distance=distance,
         slots=slots,
         sm_scale=h ** -0.5,
     )
@@ -164,7 +169,7 @@ def decode_attention_p(
             pltpu.SemaphoreType.DMA((slots,)),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
     )(lengths, q, k, v)

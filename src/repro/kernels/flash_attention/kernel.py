@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.jaxcompat import tpu_compiler_params
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -156,7 +158,7 @@ def flash_attention_p(
             pltpu.VMEM((block_q * g, h), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
     )(q, k, v)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.jaxcompat import tpu_compiler_params
+
 
 def _lru_kernel(a_ref, b_ref, o_ref, h_ref, *, chunk_t: int):
     t = pl.program_id(2)
@@ -65,7 +67,7 @@ def linear_recurrence_p(
         out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, block_w), a.dtype)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(a, b)

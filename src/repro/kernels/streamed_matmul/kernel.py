@@ -29,6 +29,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.jaxcompat import tpu_compiler_params
+
+from repro.core.engine import static_auto_distance
 from repro.core.refspec import PrefetchSpec
 
 
@@ -104,14 +107,17 @@ def streamed_matmul_p(
         f"({block_m},{block_n},{block_k})"
     )
     n_k = k // block_k
+    # the VMEM ring is static: "auto" resolves to a fixed head start here,
+    # exactly like the compiled graph engine (prefetch.streamed_scan)
+    distance = spec.numeric_distance(static_auto_distance(n_k))
     # ring must hold the in-use tile + `distance` in flight
-    slots = max(spec.buffer_size, spec.distance + 1, 1)
+    slots = max(spec.buffer_size, distance + 1, 1)
 
     kernel = functools.partial(
         _streamed_matmul_kernel,
         block_k=block_k,
         n_k=n_k,
-        distance=spec.distance,
+        distance=distance,
         slots=slots,
     )
     return pl.pallas_call(
@@ -129,7 +135,7 @@ def streamed_matmul_p(
             pltpu.SemaphoreType.DMA((slots,)),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
     )(x, w)

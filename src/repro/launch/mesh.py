@@ -9,23 +9,19 @@ from __future__ import annotations
 
 import jax
 
+from repro.jaxcompat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256-chip pod (``data x model``) or 2x16x16 = 512-chip
     two-pod mesh (``pod x data x model``; ``pod`` is the DCN axis)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Mesh over whatever devices exist (CPU tests / single host)."""
     n = len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh(
-        (n // model, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // model, model), ("data", "model"))

@@ -47,6 +47,8 @@ def build_trainer(
     fail_at=None,
     prefetch_distance: int = 2,
     policy=None,
+    stream_opt: bool = False,
+    opt_stream_groups: int = 4,
 ):
     """Assemble (driver, jitted step) for a config on a mesh.
 
@@ -56,8 +58,17 @@ def build_trainer(
     steps; the runtime streams it to the device for the update and back
     (on backends without host-offload execution the kinds fall back to
     device with identical program topology, see memkind docs).
+
+    ``stream_opt`` upgrades a host-kind optimizer policy from bulk
+    step-boundary copies to the transfer-engine streamed update: moments
+    live on the host as numpy groups and stream through
+    ``repro.core.engine.TransferEngine`` (coalesced, pipelined write-back,
+    ``distance="auto"``) during the update itself.
     """
     from repro.core import memkind as mk
+    from repro.core.engine import TransferEngine
+    from repro.core.hoststream import StreamStats
+    from repro.core.refspec import PrefetchSpec
 
     policy = policy or mk.ALL_DEVICE
     plan = sh.make_plan(mesh, mode="train")
@@ -108,6 +119,50 @@ def build_trainer(
             opt = _opt_home(opt)  # stream back (paper 'rw' write-back)
         return {"params": params, "opt": opt}, metrics
 
+    if stream_opt and policy.opt_state.jax_kind == "device":
+        logging.getLogger("repro.train").warning(
+            "--stream-opt ignored: policy %r keeps optimizer state on "
+            "device; use --policy host_opt (or host_all) to stream it",
+            policy.name,
+        )
+    if stream_opt and policy.opt_state.jax_kind != "device":
+        # engine-streamed optimizer: moments stay host numpy between steps
+        engine = TransferEngine()
+        stream_stats = StreamStats()
+        streamed = st.make_streamed_train_step(
+            cfg,
+            opt_cfg,
+            mesh,
+            sharder,
+            n_groups=opt_stream_groups,
+            prefetch=PrefetchSpec(
+                buffer_size=opt_stream_groups + 1, distance="auto"
+            ),
+            engine=engine,
+            stats=stream_stats,
+        )
+
+        def init_state_streamed():
+            params, _ = st.init_train_state(jax.random.PRNGKey(seed), cfg)
+            with mesh:
+                params = jax.device_put(params, p_sh)
+            return {"params": params, "opt": st.host_opt_state(params)}
+
+        def wrapped_step_streamed(state, batch):
+            with mesh:
+                return streamed(state, batch)
+
+        driver = TrainDriver(
+            driver_cfg,
+            wrapped_step_streamed,
+            loader,
+            init_state_streamed,
+            fail_at=fail_at,
+            engine=engine,
+            stream_stats=stream_stats,
+        )
+        return driver
+
     driver = TrainDriver(
         driver_cfg, wrapped_step, loader, init_state, fail_at=fail_at
     )
@@ -131,6 +186,12 @@ def main() -> int:
         default="all_device",
         choices=["all_device", "host_opt", "host_params", "host_all"],
         help="memory-kind placement policy (paper memory kinds)",
+    )
+    ap.add_argument(
+        "--stream-opt",
+        action="store_true",
+        help="stream host-kind optimizer state through the transfer engine "
+        "(coalesced + pipelined write-back + adaptive prefetch distance)",
     )
     args = ap.parse_args()
 
@@ -156,6 +217,7 @@ def main() -> int:
         driver_cfg=driver_cfg,
         seed=args.seed,
         policy=mk.get_policy(args.policy),
+        stream_opt=args.stream_opt,
     )
     t0 = time.time()
     driver.run()

@@ -51,6 +51,49 @@ def global_norm(tree: Pytree) -> jnp.ndarray:
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
+def adamw_globals(cfg: AdamWConfig, grads: Pytree, step) -> dict:
+    """Scalar quantities shared by every leaf at (1-based) ``step``.
+
+    Split out of :func:`adamw_update` so the streamed optimizer path
+    (``repro.train.steps.make_streamed_opt_updater``, which applies
+    :func:`adamw_leaf_update` group-wise while the moments stream through
+    the transfer engine) computes the *identical* numbers once up front.
+    """
+    from repro.optim.schedule import cosine_schedule
+
+    step = jnp.asarray(step)
+    lr = cosine_schedule(
+        step,
+        peak_lr=cfg.peak_lr,
+        warmup_steps=cfg.warmup_steps,
+        total_steps=cfg.total_steps,
+        min_ratio=cfg.min_lr_ratio,
+    )
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    fstep = step.astype(jnp.float32)
+    return {
+        "lr": lr,
+        "grad_norm": gnorm,
+        "scale": scale,
+        "bc1": 1.0 - cfg.b1 ** fstep,
+        "bc2": 1.0 - cfg.b2 ** fstep,
+    }
+
+
+def adamw_leaf_update(cfg: AdamWConfig, glob: dict, g, s) -> tuple:
+    """One parameter leaf's AdamW update given the step globals.
+
+    Returns ``(new_master_f32, new_state_leaf)``.
+    """
+    g = g.astype(jnp.float32) * glob["scale"]
+    m = cfg.b1 * s["m"] + (1 - cfg.b1) * g
+    v = cfg.b2 * s["v"] + (1 - cfg.b2) * g * g
+    upd = (m / glob["bc1"]) / (jnp.sqrt(v / glob["bc2"]) + cfg.eps)
+    master = s["master"] * (1.0 - glob["lr"] * cfg.weight_decay) - glob["lr"] * upd
+    return master, {"master": master, "m": m, "v": v}
+
+
 def adamw_update(
     cfg: AdamWConfig,
     grads: Pytree,
@@ -63,35 +106,13 @@ def adamw_update(
     ``new_params`` leaves are cast to ``compute_dtype`` (the master stays
     f32 inside the state).
     """
-    from repro.optim.schedule import cosine_schedule
-
     step = opt_state["step"] + 1
-    lr = cosine_schedule(
-        step,
-        peak_lr=cfg.peak_lr,
-        warmup_steps=cfg.warmup_steps,
-        total_steps=cfg.total_steps,
-        min_ratio=cfg.min_lr_ratio,
-    )
-    gnorm = global_norm(grads)
-    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
-
-    b1, b2 = cfg.b1, cfg.b2
-    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
-
-    def leaf(g, s):
-        g = g.astype(jnp.float32) * scale
-        m = b1 * s["m"] + (1 - b1) * g
-        v = b2 * s["v"] + (1 - b2) * g * g
-        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
-        master = s["master"] * (1.0 - lr * cfg.weight_decay) - lr * upd
-        return master, {"master": master, "m": m, "v": v}
+    glob = adamw_globals(cfg, grads, step)
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_s = treedef.flatten_up_to(opt_state["leaves"])
-    out = [leaf(g, s) for g, s in zip(flat_g, flat_s)]
+    out = [adamw_leaf_update(cfg, glob, g, s) for g, s in zip(flat_g, flat_s)]
     new_params = treedef.unflatten([p.astype(compute_dtype) for p, _ in out])
     new_leaves = treedef.unflatten([s for _, s in out])
-    metrics = {"grad_norm": gnorm, "lr": lr}
+    metrics = {"grad_norm": glob["grad_norm"], "lr": glob["lr"]}
     return new_params, {"leaves": new_leaves, "step": step}, metrics

@@ -9,7 +9,10 @@ The driver owns everything a pod-scale job needs around the compiled step:
   * straggler monitoring (robust z-score on step times),
   * stateless data: batch(step) is a pure function, so restarts replay
     identical data (bit-identical loss curves across failures — tested),
-  * failure injection hooks for testing (``fail_at`` raises mid-run).
+  * failure injection hooks for testing (``fail_at`` raises mid-run),
+  * transfer-engine lifecycle for the streamed-optimizer path: the driver
+    owns the ``TransferEngine`` passed to it, logs its per-run stream stats,
+    and closes it when the run completes (or finally fails).
 
 On a real cluster the restart loop wraps `jax.distributed` re-initialization
 and an elastic re-mesh (repro.runtime.elastic); on this container the same
@@ -58,6 +61,8 @@ class TrainDriver:
         init_state: Callable[[], Pytree],
         *,
         fail_at: Optional[set[int]] = None,  # test hook: raise at these steps
+        engine: Optional[Any] = None,  # repro.core.engine.TransferEngine
+        stream_stats: Optional[Any] = None,  # repro.core.hoststream.StreamStats
     ) -> None:
         self.cfg = cfg
         self.step_fn = step_fn
@@ -68,6 +73,10 @@ class TrainDriver:
         self.monitor = StragglerMonitor(deadline_s=cfg.step_deadline_s)
         self.history: list[dict] = []
         self.restarts = 0
+        #: transfer engine whose lifecycle this driver owns (closed when the
+        #: run finishes or finally fails) — the streamed-optimizer path
+        self.engine = engine
+        self.stream_stats = stream_stats
 
     # ------------------------------------------------------------------ run
     def _restore_or_init(self) -> tuple[int, Pytree]:
@@ -80,19 +89,34 @@ class TrainDriver:
         return step + 1, state
 
     def run(self) -> Pytree:
-        while True:
-            try:
-                return self._run_once()
-            except Exception as e:  # noqa: BLE001 — the restart loop
-                self.restarts += 1
-                log.warning(
-                    "step failure (%s); restart %d/%d",
-                    e,
-                    self.restarts,
-                    self.cfg.max_restarts,
+        try:
+            while True:
+                try:
+                    return self._run_once()
+                except Exception as e:  # noqa: BLE001 — the restart loop
+                    self.restarts += 1
+                    log.warning(
+                        "step failure (%s); restart %d/%d",
+                        e,
+                        self.restarts,
+                        self.cfg.max_restarts,
+                    )
+                    if self.restarts > self.cfg.max_restarts:
+                        raise
+        finally:
+            if self.stream_stats is not None and self.stream_stats.n_groups:
+                s = self.stream_stats
+                log.info(
+                    "transfer engine: %d groups, %.2f req/group, "
+                    "wait %.3fs, writeback drain %.3fs, final distance %s",
+                    s.n_groups,
+                    s.requests_per_group,
+                    s.transfer_wait_s,
+                    s.writeback_drain_s,
+                    s.distance_trace[-1] if s.distance_trace else None,
                 )
-                if self.restarts > self.cfg.max_restarts:
-                    raise
+            if self.engine is not None:
+                self.engine.close()
 
     def _run_once(self) -> Pytree:
         start, state = self._restore_or_init()

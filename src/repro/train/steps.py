@@ -3,6 +3,14 @@
 These are the functions the launcher jits with the sharding plan's
 in/out-shardings and that the dry-run lowers for every (arch x shape x mesh)
 cell.  All of them are pure: ``(state..., batch) -> (state..., outputs)``.
+
+The streamed-optimizer path (``make_streamed_opt_updater`` /
+``make_streamed_train_step``) is the paper's flagship pattern applied to the
+largest state group of training: AdamW moments + f32 master live at the
+*host* kind between steps and stream through the
+:class:`~repro.core.engine.TransferEngine` group-wise during the update —
+coalesced H2D, ``rw`` write-back pipelined off the compute path, prefetch
+distance adaptive when ``PrefetchSpec(distance="auto")``.
 """
 from __future__ import annotations
 
@@ -11,10 +19,20 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.engine import TransferEngine
+from repro.core.hoststream import HostStreamExecutor, StreamStats
+from repro.core.refspec import PrefetchSpec
 from repro.models import transformer
-from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_globals,
+    adamw_init,
+    adamw_leaf_update,
+    adamw_update,
+)
 
 Pytree = Any
 
@@ -37,6 +55,170 @@ def make_train_step(
         return new_params, new_opt, metrics
 
     return train_step
+
+
+def make_grad_step(
+    cfg: ModelConfig, mesh=None, sharder=None
+) -> Callable[[Pytree, Pytree], tuple[jax.Array, dict, Pytree]]:
+    """``(params, batch) -> (loss, aux, grads)`` — the forward/backward half
+    of the train step, split out so the optimizer half can run through the
+    host-streaming engine."""
+
+    def grad_step(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            transformer.lm_loss, argnums=1, has_aux=True
+        )(cfg, params, batch, mesh, sharder)
+        if sharder is not None:
+            grads = sharder.grads(grads)
+        return loss, aux, grads
+
+    return grad_step
+
+
+# ---------------------------------------------------------------------------
+# streamed optimizer update (host-resident AdamW state, paper 'rw' streaming)
+# ---------------------------------------------------------------------------
+
+
+def _to_host(x):
+    """numpy view of a concrete array; abstract values pass through so the
+    driver's ``jax.eval_shape(init_state)`` restore template still works."""
+    return x if isinstance(x, jax.core.Tracer) else np.asarray(x)
+
+
+def host_opt_state(params: Pytree) -> dict:
+    """Fresh AdamW state resident at the host kind (numpy leaves).
+
+    This is the home representation the streamed updater maintains: the
+    moments never hold device memory between steps.
+    """
+    dev = adamw_init(params)
+    return {
+        "leaves": jax.tree.map(_to_host, dev["leaves"]),
+        "step": _to_host(dev["step"]),
+    }
+
+
+def make_streamed_opt_updater(
+    opt_cfg: AdamWConfig,
+    *,
+    compute_dtype=jnp.bfloat16,
+    n_groups: int = 4,
+    prefetch: Optional[PrefetchSpec] = None,
+    mode: str = "prefetch",
+    engine: Optional[TransferEngine] = None,
+) -> Callable[..., tuple[Pytree, dict, dict]]:
+    """Build ``update(grads, host_state, stats=None) -> (new_params,
+    new_host_state, metrics)`` with host-resident optimizer state.
+
+    Parameter leaves are partitioned into ``n_groups`` contiguous groups.
+    Per group, the state leaves stream H2D through the engine (coalesced:
+    one request per group) while the previous group's update computes;
+    gradients are already device-resident and pass through by reference.
+    New moments stream back D2H asynchronously (``rw`` write-back) and the
+    new master-derived params stay on device.  The math is exactly
+    :func:`repro.optim.adamw.adamw_update` (same leaf function, same
+    globals); results agree to float32 rounding (the group-wise jit fuses
+    differently than a whole-tree program), and the transfer schedule is
+    the only structural difference.
+    """
+    prefetch = prefetch or PrefetchSpec(buffer_size=n_groups, distance=1)
+
+    @jax.jit
+    def _globals(grads, step):
+        return adamw_globals(opt_cfg, grads, step)
+
+    @jax.jit
+    def _group_update(glob, gs, ss):
+        out = [adamw_leaf_update(opt_cfg, glob, g, s) for g, s in zip(gs, ss)]
+        new_p = tuple(p.astype(compute_dtype) for p, _ in out)
+        new_s = tuple(s for _, s in out)
+        return new_p, new_s
+
+    own_engine = engine
+    executor_box: list = []  # lazily built so the updater is picklable-ish
+
+    def _executor() -> HostStreamExecutor:
+        if not executor_box:
+            new_params_box: list = []
+
+            def apply(glob, group):
+                new_p, new_s = _group_update(glob, group["g"], group["s"])
+                new_params_box.append(new_p)
+                return glob, new_s
+
+            ex = HostStreamExecutor(apply, writeback=True, engine=own_engine)
+            executor_box.append((ex, new_params_box))
+        return executor_box[0]
+
+    def update(grads, host_state, stats: Optional[StreamStats] = None):
+        ex, new_params_box = _executor()
+        new_params_box.clear()
+        step = int(host_state["step"]) + 1
+        glob = _globals(grads, step)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(host_state["leaves"])
+        n = len(flat_g)
+        bounds = np.linspace(0, n, min(n_groups, n) + 1).astype(int)
+        groups = [
+            {
+                "g": tuple(flat_g[bounds[i] : bounds[i + 1]]),
+                "s": tuple(flat_s[bounds[i] : bounds[i + 1]]),
+            }
+            for i in range(len(bounds) - 1)
+        ]
+
+        _, state_outs = ex.run(glob, groups, mode=mode, prefetch=prefetch, stats=stats)
+
+        flat_new_p = [p for chunk in new_params_box for p in chunk]
+        flat_new_s = [s for chunk in state_outs for s in chunk]
+        new_params = treedef.unflatten(flat_new_p)
+        new_state = {
+            "leaves": treedef.unflatten(flat_new_s),
+            "step": np.asarray(step, np.int32),
+        }
+        metrics = {"grad_norm": glob["grad_norm"], "lr": glob["lr"]}
+        return new_params, new_state, metrics
+
+    update.close = lambda: executor_box and executor_box[0][0].close()  # type: ignore[attr-defined]
+    return update
+
+
+def make_streamed_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    mesh=None,
+    sharder=None,
+    *,
+    n_groups: int = 4,
+    prefetch: Optional[PrefetchSpec] = None,
+    engine: Optional[TransferEngine] = None,
+    stats: Optional[StreamStats] = None,
+) -> Callable[[dict, Pytree], tuple[dict, dict]]:
+    """``(state, batch) -> (state, metrics)`` with host-resident optimizer.
+
+    ``state = {"params": device pytree, "opt": host_opt_state(...)}``.  The
+    forward/backward half is jitted; the AdamW half streams the host-kind
+    moments through the transfer engine (see ``make_streamed_opt_updater``).
+    """
+    grad_fn = jax.jit(make_grad_step(cfg, mesh, sharder))
+    updater = make_streamed_opt_updater(
+        opt_cfg,
+        compute_dtype=cfg.compute_dtype,
+        n_groups=n_groups,
+        prefetch=prefetch,
+        engine=engine,
+    )
+
+    def step_fn(state, batch):
+        loss, aux, grads = grad_fn(state["params"], batch)
+        new_params, new_opt, om = updater(grads, state["opt"], stats=stats)
+        metrics = {"loss": loss, **aux, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    step_fn.close = updater.close  # type: ignore[attr-defined]
+    return step_fn
 
 
 def make_prefill_step(
@@ -71,8 +253,6 @@ def init_train_state(
     key: jax.Array, cfg: ModelConfig
 ) -> tuple[Pytree, Pytree]:
     """(bf16 params, AdamW state with f32 master) for a fresh run."""
-    from repro.optim.adamw import adamw_init
-
     params_f32 = transformer.init_model(key, cfg)
     opt_state = adamw_init(params_f32)
     params = jax.tree.map(lambda p: p.astype(cfg.compute_dtype), params_f32)

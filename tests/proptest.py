@@ -1,0 +1,71 @@
+"""Property-test shim: hypothesis when installed, deterministic grid otherwise.
+
+``hypothesis`` is an optional ``test`` extra (see pyproject.toml); the tier-1
+suite must collect and pass without it.  When it is missing, ``given`` runs
+the property over a small deterministic grid (strategy boundary values plus
+midpoints) instead of randomized examples — weaker search, same invariants,
+zero extra dependencies.
+
+Usage in test modules::
+
+    from proptest import given, settings, strategies as hst
+"""
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A fixed sample set standing in for a hypothesis strategy."""
+
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            picks = {min_value, min_value + 1, 0, 1, mid, max_value - 1, max_value}
+            return _Strategy(
+                sorted(v for v in picks if min_value <= v <= max_value)
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # NOTE: deliberately not functools.wraps — pytest must see a
+            # zero-argument function, not the strategy parameters (it would
+            # otherwise look for fixtures named after them).
+            def run():
+                if arg_strategies:
+                    for combo in itertools.product(
+                        *(s.samples for s in arg_strategies)
+                    ):
+                        fn(*combo)
+                else:
+                    names = list(kw_strategies)
+                    for combo in itertools.product(
+                        *(kw_strategies[n].samples for n in names)
+                    ):
+                        fn(**dict(zip(names, combo)))
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+
+        return deco

@@ -12,8 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from proptest import given, settings, strategies as hst
 
+from repro import jaxcompat
 from repro.core import memkind as mk
 from repro.core.hoststream import HostStreamExecutor, StreamStats
 from repro.core.offload import offload
@@ -27,7 +28,9 @@ from repro.core.refspec import Access, OffloadRef, PrefetchSpec
 
 def test_backend_enumerates_kinds():
     kinds = mk.backend_memory_kinds()
-    assert "device" in kinds
+    assert kinds  # every backend exposes at least its default tier
+    default = mk.default_memory_kind()
+    assert default is None or default in kinds
 
 
 def test_kind_resolution_fallback_only_for_host():
@@ -36,8 +39,17 @@ def test_kind_resolution_fallback_only_for_host():
     assert k.jax_kind in ("pinned_host", "device")
 
 
+def test_sharding_for_every_kind_is_constructible():
+    """Logical kinds must map onto *some* tier on every backend."""
+    mesh = jaxcompat.make_mesh((1,), ("data",))
+    for kind in (mk.DEVICE, mk.PINNED_HOST, mk.UNPINNED_HOST):
+        s = mk.sharding_for(mesh, jax.sharding.PartitionSpec(), kind)
+        y = jax.device_put(jnp.arange(4.0), s)
+        np.testing.assert_array_equal(np.asarray(y), np.arange(4.0))
+
+
 def test_place_round_trip():
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jaxcompat.make_mesh((1,), ("data",))
     x = jnp.arange(16.0)
     y = mk.place(x, mesh, jax.sharding.PartitionSpec(), mk.DEVICE)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(x))

@@ -45,6 +45,18 @@ def test_streamed_matmul_prefetch_invariance(dist, slots):
     np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
 
 
+def test_streamed_matmul_auto_distance():
+    """distance='auto' resolves to a static head start at trace time for
+    the fixed-shape VMEM ring (found in review: crashed on the sentinel)."""
+    from repro.core.refspec import AUTO
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 192), jnp.float32)
+    base = streamed_matmul(x, w, spec=PrefetchSpec(1, 1, 0))
+    out = streamed_matmul(x, w, spec=PrefetchSpec(buffer_size=5, distance=AUTO))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
 def test_streamed_matmul_batched_dims():
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 32, 96), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(1), (96, 64), jnp.float32)

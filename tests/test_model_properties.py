@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from proptest import given, settings, strategies as hst
 
 from repro.configs import get_smoke_config
 from repro.models import rope, transformer

@@ -6,8 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from proptest import given, settings, strategies as hst
 
+from repro import jaxcompat
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_smoke_config
 from repro.data.loader import PrefetchLoader
@@ -42,6 +43,20 @@ def test_checkpoint_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    """Extension dtypes serialize as raw void in npy; restore must re-view
+    them through meta.json (bf16 params resume — found by verification)."""
+    mgr = CheckpointManager(tmp_path, keep=2)
+    t = {"w": jnp.linspace(-2, 2, 16).astype(jnp.bfloat16)}
+    mgr.save(1, t, blocking=True)
+    _, restored = mgr.restore(jax.eval_shape(lambda: t))
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"], np.float32), np.asarray(t["w"], np.float32)
+    )
+    jnp.asarray(restored["w"])  # must be a valid JAX input
+
+
 def test_checkpoint_keep_k_prunes(tmp_path):
     mgr = CheckpointManager(tmp_path, keep=2)
     for s in (1, 2, 3, 4):
@@ -67,7 +82,7 @@ def test_checkpoint_elastic_reshard(tmp_path):
     mgr = CheckpointManager(tmp_path)
     t = _tree()
     mgr.save(1, t, blocking=True)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jaxcompat.make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()), t
     )
