@@ -2,9 +2,13 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig3 table2  # subset
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI gate: the modeled
+      LinkModel suites (engine, disk) at reduced size — deterministic on
+      shared runners, still asserts the coalescing + overlap gates
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -15,11 +19,23 @@ SUITES = {
     "table2": ("benchmarks.transfer_stall", "paper Table 2: stall vs transfer size"),
     "kernels": ("benchmarks.kernel_streaming", "kernel-level DMA schedule study"),
     "engine": ("benchmarks.engine_compare", "coalesced transfer engine vs seed per-leaf schedule"),
+    "disk": ("benchmarks.disk_tier", "DiskHost three-level streaming (modeled disk link)"),
 }
+
+#: the suites driven purely by the deterministic LinkModel emulation —
+#: meaningful on a noisy CI runner, unlike the wall-clock studies
+SMOKE_SUITES = ["engine", "disk"]
 
 
 def main() -> int:
-    names = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    if smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        args = [a for a in args if a != "--smoke"]
+    names = [a for a in args if a in SUITES] or (
+        SMOKE_SUITES if smoke else list(SUITES)
+    )
     failures = []
     for name in names:
         mod_name, desc = SUITES[name]

@@ -7,6 +7,9 @@ from repro.core import memkind
 from repro.core.memkind import (
     ALL_DEVICE,
     DEVICE,
+    DISK_HOST,
+    DISK_OPT,
+    DISK_PARAMS,
     HOST_ALL,
     HOST_OPT,
     HOST_PARAMS,
@@ -14,11 +17,13 @@ from repro.core.memkind import (
     UNPINNED_HOST,
     MemKind,
     PlacementPolicy,
+    all_kinds,
     get_policy,
     host_offload_supported,
     place,
     sharding_for,
 )
+from repro.core.spillstore import SpillStore, is_disk_leaf
 from repro.core.engine import (
     AdaptiveDistance,
     EngineConfig,
@@ -43,10 +48,16 @@ __all__ = [
     "DEVICE",
     "PINNED_HOST",
     "UNPINNED_HOST",
+    "DISK_HOST",
     "ALL_DEVICE",
     "HOST_OPT",
     "HOST_PARAMS",
     "HOST_ALL",
+    "DISK_OPT",
+    "DISK_PARAMS",
+    "all_kinds",
+    "SpillStore",
+    "is_disk_leaf",
     "offload",
     "OffloadRef",
     "PrefetchSpec",

@@ -37,11 +37,25 @@ adaptive prefetch distance
     grows/shrinks the in-flight window at run time; it backs
     ``PrefetchSpec(distance="auto")``.
 
+three-level streaming (the ``DiskHost`` tier)
+    Groups whose leaves are memory-mapped spill-store views
+    (:func:`repro.core.spillstore.is_disk_leaf`) move through a *two-stage*
+    pipeline: a dedicated disk worker copies the mapped bytes into pooled
+    host staging buffers (the disk read), then the transfer worker packs
+    and issues the H2D exactly as for host groups.  Each stage has its own
+    staging pool and its own :class:`AdaptiveDistance` controller: the
+    executor's controller sizes the submission window from *compute-thread*
+    stalls, while the engine's disk controller sizes the disk read-ahead
+    window (number of fetched-but-unconsumed buffers) from *transfer-
+    worker* stalls — so disk latency hides behind host->device latency
+    exactly as host latency hides behind compute.
+
 An optional :class:`LinkModel` emulates a slow interconnect (per-request
 service time + serial bandwidth occupancy + overlappable completion
 latency) so the paper's phenomenology — request-count collapse, prefetch
 hiding latency — is reproducible deterministically on this container,
-whose real host->device "link" is main memory.
+whose real host->device "link" is main memory.  ``EngineConfig.disk_link``
+models the disk tier's (slower) link the same way.
 """
 from __future__ import annotations
 
@@ -162,6 +176,16 @@ class EngineConfig:
     wait_eps_s: float = 100e-6
     #: consecutive stall-free groups before the window shrinks
     shrink_after: int = 4
+    # -- disk tier (DiskHost groups: two-stage disk->host->device) ----------
+    #: emulated disk link (None = the container's real page cache / disk)
+    disk_link: Optional[LinkModel] = None
+    #: initial disk read-ahead window (fetched-but-unconsumed host buffers);
+    #: the disk-stage AdaptiveDistance controller grows/shrinks it at run
+    #: time from observed transfer-worker stalls
+    disk_slots: int = 2
+    disk_max_slots: int = 8
+    disk_wait_eps_s: float = 100e-6
+    disk_shrink_after: int = 4
 
 
 def static_auto_distance(n_chunks: int, cap: int = 4) -> int:
@@ -347,6 +371,9 @@ class TransferFuture:
         "src_leaves",
         "n_requests",
         "nbytes",
+        "disk_requests",
+        "disk_nbytes",
+        "disk_wait_s",
         "_event",
         "_flat",
         "_device_tree",
@@ -361,6 +388,12 @@ class TransferFuture:
         self.src_leaves = src_leaves
         self.n_requests = n_requests
         self.nbytes = nbytes
+        #: disk-tier accounting (zero for pure host/device groups)
+        self.disk_requests = 0
+        self.disk_nbytes = 0
+        #: time the *transfer worker* blocked on the disk stage (stage-2-on-
+        #: stage-1 stall; zero when the disk read-ahead window covers it)
+        self.disk_wait_s = 0.0
         self._event = threading.Event()
         self._flat = None
         self._device_tree = None
@@ -399,6 +432,31 @@ class TransferFuture:
             self._flat = None  # donated/consumed — release our reference
             self.src_leaves = None
         return self._group
+
+
+class _DiskFetchTicket:
+    """Handle to one in-flight disk->host-staging fetch (pipeline stage 1).
+
+    The disk worker copies each memory-mapped leaf into a pooled host
+    staging buffer (the copy *is* the disk read) and publishes ndarray
+    views; the transfer worker substitutes them for the mapped leaves
+    before packing, then releases the buffer back to the pool.
+    """
+
+    __slots__ = ("sig", "idx", "n_requests", "nbytes", "_event", "_error",
+                 "views", "buf", "ready_at")
+
+    def __init__(self, sig: tuple, idx: list, n_requests: int, nbytes: int):
+        self.sig = sig
+        #: positions of the disk leaves in the group's flattened leaf list
+        self.idx = idx
+        self.n_requests = n_requests
+        self.nbytes = nbytes
+        self._event = threading.Event()
+        self._error: Optional[BaseException] = None
+        self.views: Optional[list] = None
+        self.buf: Optional[np.ndarray] = None
+        self.ready_at = 0.0
 
 
 class _WritebackTicket:
@@ -451,6 +509,21 @@ class TransferEngine:
         #: occupancy — worker H2D/D2H *and* the executor's blocking D2H
         #: (seed schedule) — holds this lock for its duration
         self._link_lock = threading.Lock()
+        # -- disk stage (DiskHost groups) -----------------------------------
+        self._disk_tasks: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._disk_worker: Optional[threading.Thread] = None
+        self._disk_layouts: dict[tuple, GroupLayout] = {}
+        self._disk_free: dict[tuple, list[np.ndarray]] = {}
+        #: fetched-but-unconsumed disk buffers; bounded by the read-ahead
+        #: window so the disk stage cannot run unboundedly ahead of H2D
+        self._disk_in_use = 0
+        self._disk_cond = threading.Condition()
+        self._disk_controller: Optional[AdaptiveDistance] = None
+        self._disk_window = max(1, self.config.disk_slots)
+        #: total disk staging buffers ever allocated (reuse metric)
+        self.disk_staging_allocs: int = 0
+        #: the (emulated) disk is its own serial resource
+        self._disk_link_lock = threading.Lock()
 
     # -- lifecycle -----------------------------------------------------------
     def _ensure_worker(self) -> None:
@@ -460,14 +533,29 @@ class TransferEngine:
             )
             self._worker.start()
 
+    def _ensure_disk_worker(self) -> None:
+        if self._disk_worker is None or not self._disk_worker.is_alive():
+            self._disk_worker = threading.Thread(
+                target=self._disk_worker_loop, name="transfer-engine-disk",
+                daemon=True,
+            )
+            self._disk_worker.start()
+
     def close(self) -> None:
-        """Stop the worker thread.  Not final: a later submit restarts the
-        worker, so close() is "quiesce", matching the driver's restart loop
-        (close at shutdown, resurrect transparently if reused)."""
+        """Stop the worker threads.  Not final: a later submit restarts the
+        workers, so close() is "quiesce", matching the driver's restart loop
+        (close at shutdown, resurrect transparently if reused).  Pending
+        tasks — including in-flight disk fetches — drain before the workers
+        exit, so no future is left unset."""
+        if self._disk_worker is not None and self._disk_worker.is_alive():
+            self._disk_tasks.put(None)
         if self._worker is not None and self._worker.is_alive():
             self._tasks.put(None)
             self._worker.join(timeout=5.0)
+        if self._disk_worker is not None and self._disk_worker.is_alive():
+            self._disk_worker.join(timeout=5.0)
         self._worker = None
+        self._disk_worker = None
 
     def __enter__(self) -> "TransferEngine":
         return self
@@ -521,6 +609,67 @@ class TransferEngine:
         except Exception:  # noqa: BLE001 — unknown backend: assume aliasing
             return True
 
+    # -- disk stage pool (read-ahead window) --------------------------------
+    def _disk_layout_for(self, dsig: tuple, disk_leaves: list) -> GroupLayout:
+        lo = self._disk_layouts.get(dsig)
+        if lo is None:
+            lo = GroupLayout(tuple(disk_leaves), donate_flat=False)
+            self._disk_layouts[dsig] = lo
+            self._disk_free[dsig] = []
+        return lo
+
+    def _acquire_disk_staging(self, dsig: tuple, layout: GroupLayout) -> np.ndarray:
+        """Check a host buffer out of the disk pool (disk worker thread).
+
+        Blocks while ``window`` buffers are already fetched-but-unconsumed —
+        this is the disk read-ahead throttle the disk-stage controller
+        adjusts.  Progress is guaranteed: the transfer worker consumes
+        tickets in submission order and releases each buffer after packing.
+        """
+        with self._disk_cond:
+            while self._disk_in_use >= max(1, self._disk_window):
+                self._disk_cond.wait(timeout=0.5)
+            self._disk_in_use += 1
+        try:
+            free = self._disk_free[dsig]
+            if free:
+                return free.pop()
+            self.disk_staging_allocs += 1
+            return layout.new_staging()
+        except BaseException:
+            # allocation failed (e.g. MemoryError in a RAM-constrained run):
+            # give the window slot back or the pipeline wedges permanently
+            with self._disk_cond:
+                self._disk_in_use -= 1
+                self._disk_cond.notify_all()
+            raise
+
+    def _release_disk_staging(self, dsig: tuple, buf: np.ndarray) -> None:
+        free = self._disk_free.get(dsig)
+        if free is not None and len(free) < self.config.disk_max_slots:
+            free.append(buf)
+        with self._disk_cond:
+            self._disk_in_use -= 1
+            self._disk_cond.notify_all()
+
+    def _observe_disk_wait(self, wait_s: float) -> None:
+        """Feed the disk-stage controller one stage-2-on-stage-1 stall
+        sample; widens/narrows the read-ahead window (transfer worker)."""
+        if self._disk_controller is None:
+            cfg = self.config
+            self._disk_controller = AdaptiveDistance(
+                initial=cfg.disk_slots,
+                min_distance=1,
+                max_distance=cfg.disk_max_slots,
+                wait_eps_s=cfg.disk_wait_eps_s,
+                shrink_after=cfg.disk_shrink_after,
+            )
+        new = self._disk_controller.observe(wait_s)
+        if new != self._disk_window:
+            with self._disk_cond:
+                self._disk_window = new
+                self._disk_cond.notify_all()
+
     # -- submission (compute thread) ----------------------------------------
     def submit_group(self, index: int, group: Pytree, *, device_shardings=None) -> TransferFuture:
         """Queue the H2D transfer of one group; returns immediately.
@@ -528,16 +677,43 @@ class TransferEngine:
         Coalescing requires default placement; with explicit
         ``device_shardings`` (multi-device layouts) the engine falls back to
         the per-leaf path, which honours them.
+
+        Groups containing disk-tier leaves (spill-store memmaps, see
+        :mod:`repro.core.spillstore`) additionally enqueue a stage-1 fetch
+        on the disk worker; the H2D stage blocks on it per group, so the
+        two stages pipeline across groups.
         """
+        from repro.core.spillstore import is_disk_leaf
+
         leaves = jax.tree.leaves(group)
         coalesce = self.config.coalesce and device_shardings is None
         sig = None
+        ticket = None
         if coalesce:
             sig = group_signature(group)
             layout = self._layout_for_sig(sig, group)
             n_req = 1 if layout.metas else 0
             nbytes = layout.payload_bytes
             fut = TransferFuture(index, layout, leaves, n_req, nbytes)
+            disk_idx = [i for i, x in enumerate(leaves) if is_disk_leaf(x)]
+            if disk_idx:
+                disk_leaves = [leaves[i] for i in disk_idx]
+                # one chunk file = one disk request (the store's coalescing)
+                n_files = len(
+                    {getattr(x, "filename", None) or id(x) for x in disk_leaves}
+                )
+                # group_signature cannot tell a memmap from an ndarray, so
+                # the disk layout must additionally key on *which* leaves
+                # are disk-resident
+                dsig = ("disk", sig, tuple(disk_idx))
+                dlayout = self._disk_layout_for(dsig, disk_leaves)
+                ticket = _DiskFetchTicket(
+                    dsig, disk_idx, n_files, dlayout.payload_bytes
+                )
+                fut.disk_requests = n_files
+                fut.disk_nbytes = dlayout.payload_bytes
+                self._ensure_disk_worker()
+                self._disk_tasks.put((ticket, disk_leaves))
         else:
             n_host = sum(0 if isinstance(x, jax.Array) else 1 for x in leaves)
             nbytes = sum(
@@ -546,7 +722,7 @@ class TransferEngine:
             )
             fut = TransferFuture(index, None, leaves, n_host, nbytes)
         self._ensure_worker()
-        self._tasks.put(("h2d", fut, group, device_shardings, coalesce, sig))
+        self._tasks.put(("h2d", fut, group, device_shardings, coalesce, sig, ticket))
         return fut
 
     def submit_writeback(self, index: int, group_out: Pytree) -> _WritebackTicket:
@@ -584,19 +760,43 @@ class TransferEngine:
             kind = task[0]
             try:
                 if kind == "h2d":
-                    _, fut, group, shardings, coalesce, sig = task
+                    _, fut, group, shardings, coalesce, sig, ticket = task
                     if coalesce:
-                        layout = fut.layout
-                        if layout.metas:
-                            staging = self._acquire_staging(sig, layout)
-                            layout.pack_into(fut.src_leaves, staging)
-                            flat = jax.device_put(staging)
-                            jax.block_until_ready(flat)
-                            if not self._aliases_host(flat, staging):
-                                # the device holds its own copy: recycle now
-                                self._release_staging(sig, staging)
-                        else:  # everything already device-resident
-                            flat = None
+                        src_leaves = fut.src_leaves
+                        disk_buf = None
+                        if ticket is not None:
+                            # stage-2-on-stage-1 wait: zero once the disk
+                            # read-ahead window covers the disk latency
+                            t0 = time.perf_counter()
+                            ticket._event.wait()
+                            if ticket._error is not None:
+                                raise ticket._error
+                            residual = ticket.ready_at - time.perf_counter()
+                            if residual > 0:
+                                _sleep_precise(residual)
+                            fut.disk_wait_s = time.perf_counter() - t0
+                            self._observe_disk_wait(fut.disk_wait_s)
+                            src_leaves = list(src_leaves)
+                            for i, view in zip(ticket.idx, ticket.views):
+                                src_leaves[i] = view
+                            disk_buf = ticket.buf
+                        try:
+                            layout = fut.layout
+                            if layout.metas:
+                                staging = self._acquire_staging(sig, layout)
+                                layout.pack_into(src_leaves, staging)
+                                flat = jax.device_put(staging)
+                                jax.block_until_ready(flat)
+                                if not self._aliases_host(flat, staging):
+                                    # the device holds its own copy: recycle now
+                                    self._release_staging(sig, staging)
+                            else:  # everything already device-resident
+                                flat = None
+                        finally:
+                            if disk_buf is not None:
+                                # packed (or failed): the disk buffer's bytes
+                                # are no longer needed either way
+                                self._release_disk_staging(ticket.sig, disk_buf)
                         ready_at = self._emulate(link, fut.n_requests, fut.nbytes)
                         fut._complete(flat=flat, ready_at=ready_at)
                     else:
@@ -619,15 +819,53 @@ class TransferEngine:
                 obj._error = e
                 obj._event.set()
 
-    def _emulate(self, link: Optional[LinkModel], n_requests: int, nbytes: int) -> float:
+    # -- disk worker thread (pipeline stage 1) ------------------------------
+    def _disk_worker_loop(self) -> None:
+        link = self.config.disk_link
+        while True:
+            task = self._disk_tasks.get()
+            if task is None:
+                return
+            ticket, disk_leaves = task
+            buf = None
+            try:
+                layout = self._disk_layouts[ticket.sig]
+                buf = self._acquire_disk_staging(ticket.sig, layout)
+                # the copy out of the memory-mapped view IS the disk read
+                layout.pack_into(disk_leaves, buf)
+                views = [
+                    buf[o : o + nb].view(dt).reshape(shape)
+                    for _, o, shape, dt, nb in layout.metas
+                ]
+                ticket.ready_at = self._emulate(
+                    link, ticket.n_requests, ticket.nbytes,
+                    lock=self._disk_link_lock,
+                )
+                ticket.views = views
+                ticket.buf = buf
+                ticket._event.set()
+            except BaseException as e:  # noqa: BLE001 — surface on stage 2
+                if buf is not None:
+                    self._release_disk_staging(ticket.sig, buf)
+                ticket._error = e
+                ticket._event.set()
+
+    def _emulate(
+        self,
+        link: Optional[LinkModel],
+        n_requests: int,
+        nbytes: int,
+        *,
+        lock: Optional[threading.Lock] = None,
+    ) -> float:
         """Hold the emulated link for the transfer's occupancy (sleep under
-        the link lock) and return the completion timestamp including the
-        overlappable latency tail."""
+        the link's serial lock) and return the completion timestamp
+        including the overlappable latency tail."""
         if link is None or n_requests == 0:
             return 0.0
         occ = link.occupancy_s(n_requests, nbytes)
         if occ > 0:
-            with self._link_lock:
+            with (lock if lock is not None else self._link_lock):
                 _sleep_precise(occ)
         return time.perf_counter() + link.latency_s
 

@@ -71,6 +71,12 @@ class StreamStats:
     n_groups: int = 0
     n_runs: int = 0
     writeback_drain_s: float = 0.0
+    # -- disk tier (DiskHost groups: stage-1 of the three-level pipeline) ---
+    disk_requests: int = 0
+    bytes_disk: int = 0
+    #: time the *transfer worker* (stage 2) blocked on disk fetches; zero
+    #: once the disk read-ahead window hides the disk latency
+    disk_wait_s: float = 0.0
     #: per-group compute-thread stall (the wait histogram's raw samples);
     #: bounded so a stats object shared across a long training run does not
     #: grow with step count — old samples age out, aggregates stay exact
@@ -81,10 +87,41 @@ class StreamStats:
     distance_trace: "deque[int]" = dataclasses.field(
         default_factory=lambda: deque(maxlen=_MAX_SAMPLES)
     )
+    #: per-group stage-2-on-stage-1 (H2D-on-disk) stall samples
+    disk_wait_per_group: "deque[float]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=_MAX_SAMPLES)
+    )
 
     @property
     def requests_per_group(self) -> float:
         return self.h2d_requests / self.n_groups if self.n_groups else 0.0
+
+    @property
+    def disk_requests_per_group(self) -> float:
+        return self.disk_requests / self.n_groups if self.n_groups else 0.0
+
+    def per_tier(self) -> dict[str, dict[str, float]]:
+        """Request/byte/wait counters per hierarchy tier (paper Table 2,
+        extended down the hierarchy).  The wait of each tier is the stall
+        of the consumer one level up: compute stalls on host->device,
+        host->device stalls on disk."""
+        return {
+            "h2d": {
+                "requests": self.h2d_requests,
+                "bytes": self.bytes_h2d,
+                "wait_s": self.transfer_wait_s,
+            },
+            "d2h": {
+                "requests": self.d2h_requests,
+                "bytes": self.bytes_d2h,
+                "wait_s": self.writeback_drain_s,
+            },
+            "disk": {
+                "requests": self.disk_requests,
+                "bytes": self.bytes_disk,
+                "wait_s": self.disk_wait_s,
+            },
+        }
 
     def wait_hist(self, bins: Sequence[float] = _WAIT_BINS) -> dict[str, int]:
         """Per-group wait histogram: bucket label -> count."""
@@ -110,10 +147,13 @@ class StreamStats:
         row = {
             f.name: getattr(self, f.name)
             for f in dataclasses.fields(self)
-            if f.name not in ("wait_per_group", "distance_trace")
+            if f.name
+            not in ("wait_per_group", "distance_trace", "disk_wait_per_group")
         }
         row["requests_per_group"] = self.requests_per_group
+        row["disk_requests_per_group"] = self.disk_requests_per_group
         row["wait_hist"] = self.wait_hist()
+        row["per_tier"] = self.per_tier()
         row["final_distance"] = self.distance_trace[-1] if self.distance_trace else None
         return row
 
@@ -235,11 +275,15 @@ class HostStreamExecutor:
                 st.n_transfers += 1
                 st.h2d_requests += fut.n_requests
                 st.bytes_h2d += fut.nbytes
+                st.disk_requests += fut.disk_requests
+                st.bytes_disk += fut.disk_nbytes
                 futs.append(fut)
             for fut in futs:
                 w = fut.wait()
                 st.transfer_wait_s += w
                 st.wait_per_group.append(w)
+                st.disk_wait_s += fut.disk_wait_s
+                st.disk_wait_per_group.append(fut.disk_wait_s)
             t0 = time.perf_counter()
             for fut in futs:
                 carry = self._step(carry, fut.group(), outs, st)
@@ -255,6 +299,8 @@ class HostStreamExecutor:
                     st.n_transfers += 1
                     st.h2d_requests += fut.n_requests
                     st.bytes_h2d += fut.nbytes
+                    st.disk_requests += fut.disk_requests
+                    st.bytes_disk += fut.disk_nbytes
                     inflight[issued] = fut
                     issued += 1
                 fut = inflight.pop(i)
@@ -264,6 +310,8 @@ class HostStreamExecutor:
                 st.transfer_wait_s += w
                 st.wait_per_group.append(w)
                 st.distance_trace.append(distance)
+                st.disk_wait_s += fut.disk_wait_s
+                st.disk_wait_per_group.append(fut.disk_wait_s)
                 if controller is not None:
                     distance = controller.observe(w)
                 t0 = time.perf_counter()

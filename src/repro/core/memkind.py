@@ -3,16 +3,34 @@
 The paper introduces ``Host`` / ``Shared`` / ``Microcore`` *kind* objects that
 declare where in the memory hierarchy a tensor lives; kernels receive
 references regardless of kind, and the kind encapsulates transfer mechanics.
+Crucially (§3.2), adding a level is *just a new ``Kind`` subclass* — the level
+does not have to be addressable by the accelerator, or even by XLA.
 
-On TPU the hierarchy is  host DRAM -> HBM -> VMEM.  JAX exposes the first two
-levels as sharding *memory kinds* (``pinned_host`` / ``device``); the VMEM
-level is managed inside Pallas kernels (see ``repro.kernels``).  This module
-provides:
+The hierarchy modelled here is three levels deep (see
+``docs/memory_hierarchy.md``):
 
-  * ``MemKind`` subclasses mirroring the paper's kinds,
+  level 0  ``Device``       HBM / device memory — XLA-addressable.
+  level 2  ``PinnedHost``   host DRAM, DMA-reachable, not compute-addressable.
+  level 3  ``UnpinnedHost`` pageable host DRAM (staging tier).
+  level 4  ``DiskHost``     disk/NVMe spill store — *not* a JAX memory at
+                            all; data reaches the device via a two-stage
+                            disk -> host-staging -> device pipeline run by
+                            :class:`repro.core.engine.TransferEngine`, with
+                            :class:`repro.core.spillstore.SpillStore` as the
+                            home representation (memory-mapped chunk files).
+
+JAX exposes the host tiers as sharding *memory kinds* (``pinned_host`` /
+``device``); the VMEM level is managed inside Pallas kernels (see
+``repro.kernels``).  Kinds that XLA cannot address (``DiskHost``) resolve to
+their *staging kind* for program placement — the compiled program only ever
+sees the staging tier, while the runtime streams the data up the extra level.
+This module provides:
+
+  * ``MemKind`` subclasses mirroring (and extending) the paper's kinds,
   * ``PlacementPolicy`` — per-state-group kind assignment (params / optimizer
     moments / KV cache / activations), the "one-line change moves your data"
-    property of the paper,
+    property of the paper — including ``DISK_OPT`` / ``DISK_PARAMS`` presets
+    for the disk tier,
   * a backend capability probe with graceful fallback: backends whose runtime
     cannot execute host-placed buffers (the CPU runtime in this container)
     transparently map host kinds onto device memory while keeping the program
@@ -32,11 +50,15 @@ __all__ = [
     "Device",
     "PinnedHost",
     "UnpinnedHost",
+    "DiskHost",
     "PlacementPolicy",
     "ALL_DEVICE",
     "HOST_OPT",
     "HOST_PARAMS",
     "HOST_ALL",
+    "DISK_OPT",
+    "DISK_PARAMS",
+    "all_kinds",
     "backend_memory_kinds",
     "backend_kind_string",
     "default_memory_kind",
@@ -52,12 +74,20 @@ class MemKind:
     'To create a kind representing a new level in the memory hierarchy
     requires a new Python class, inheriting from the Kind class')."""
 
-    #: the JAX memory-kind string this level maps to
+    #: the JAX memory-kind string this level maps to (a logical name for
+    #: levels XLA cannot address, see ``jax_addressable``)
     jax_kind: str = "device"
     #: ordering in the hierarchy; higher = further from the compute units
     level: int = 0
     #: can the accelerator's compute units load/store this level directly?
     directly_addressable: bool = True
+    #: can XLA place a buffer at this level at all?  ``False`` means the
+    #: level exists only to the runtime (disk): program placement uses
+    #: ``staging_jax_kind`` and the transfer engine bridges the gap.
+    jax_addressable: bool = True
+    #: the jax memory kind data from this level is staged through on its way
+    #: to the device (only meaningful when ``jax_addressable`` is False)
+    staging_jax_kind: str = "pinned_host"
 
     def __repr__(self) -> str:  # pragma: no cover - trivial
         return f"{type(self).__name__}(jax_kind={self.jax_kind!r}, level={self.level})"
@@ -88,22 +118,49 @@ class PinnedHost(MemKind):
 
 
 class UnpinnedHost(MemKind):
-    """Pageable host DRAM (slowest tier; staging only)."""
+    """Pageable host DRAM (slowest RAM tier; staging only)."""
 
     jax_kind = "unpinned_host"
     level = 3
     directly_addressable = False
 
 
+class DiskHost(MemKind):
+    """Disk/NVMe spill tier — a hierarchy level the accelerator (and XLA)
+    cannot address at all, demonstrating the paper's §3.2 claim that a new
+    level is just a new ``Kind`` subclass.
+
+    Home representation: memory-mapped chunk files in a
+    :class:`repro.core.spillstore.SpillStore`.  The transfer engine streams
+    chunks disk -> host staging -> device in a two-stage pipeline, hiding
+    disk latency behind host->device latency exactly as host latency is
+    hidden behind compute (``PrefetchSpec(distance="auto")`` per stage).
+    """
+
+    jax_kind = "disk_host"
+    level = 4
+    directly_addressable = False
+    jax_addressable = False
+    staging_jax_kind = "pinned_host"
+
+
 DEVICE = Device()
 PINNED_HOST = PinnedHost()
 UNPINNED_HOST = UnpinnedHost()
+DISK_HOST = DiskHost()
 
 _KIND_BY_NAME = {
     "device": DEVICE,
     "pinned_host": PINNED_HOST,
     "unpinned_host": UNPINNED_HOST,
+    "disk_host": DISK_HOST,
 }
+
+
+def all_kinds() -> tuple[MemKind, ...]:
+    """Every registered hierarchy level, nearest-to-compute first (the
+    cross-kind conformance matrix iterates this)."""
+    return tuple(sorted(_KIND_BY_NAME.values(), key=lambda k: k.level))
 
 
 def as_kind(kind: "MemKind | str | None") -> MemKind:
@@ -197,12 +254,17 @@ def host_offload_supported() -> bool:
 def resolve_kind(kind: "MemKind | str", *, allow_fallback: bool = True) -> MemKind:
     """Map a requested kind to one the backend can execute.
 
-    On backends without host-offload execution support, host kinds fall back
-    to ``Device`` (identical program topology, both tiers physically in the
-    same memory).  Lowering-only paths (the dry-run) may pass
+    Kinds XLA cannot address (``DiskHost``) first resolve to their *staging*
+    kind — the compiled program only ever sees the staging tier; the extra
+    level is the runtime's business (spill store + transfer engine).  On
+    backends without host-offload execution support, host kinds then fall
+    back to ``Device`` (identical program topology, both tiers physically in
+    the same memory).  Lowering-only paths (the dry-run) may pass
     ``allow_fallback=False`` to keep the true placement in the StableHLO.
     """
     kind = as_kind(kind)
+    if not kind.jax_addressable:
+        kind = as_kind(kind.staging_jax_kind)
     if kind.jax_kind == "device":
         return kind
     if not allow_fallback or host_offload_supported():
@@ -275,6 +337,13 @@ class PlacementPolicy:
             k.jax_kind != "device" for k in (self.params, self.opt_state, self.kv_cache)
         )
 
+    def requires_spill(self) -> bool:
+        """True if any state group lives at a non-XLA level (disk)."""
+        return any(
+            not k.jax_addressable
+            for k in (self.params, self.opt_state, self.kv_cache)
+        )
+
 
 ALL_DEVICE = PlacementPolicy(name="all_device")
 #: Adam moments + f32 master on host — the biggest win for large dense models
@@ -284,8 +353,15 @@ HOST_PARAMS = PlacementPolicy(name="host_params", params=PINNED_HOST)
 HOST_ALL = PlacementPolicy(
     name="host_all", params=PINNED_HOST, opt_state=PINNED_HOST, kv_cache=PINNED_HOST
 )
+#: Adam moments + f32 master spill to disk (larger-than-host-RAM training)
+DISK_OPT = PlacementPolicy(name="disk_opt", opt_state=DISK_HOST)
+#: weights live on disk, streamed disk->host->device (larger-than-RAM models)
+DISK_PARAMS = PlacementPolicy(name="disk_params", params=DISK_HOST)
 
-POLICIES = {p.name: p for p in (ALL_DEVICE, HOST_OPT, HOST_PARAMS, HOST_ALL)}
+POLICIES = {
+    p.name: p
+    for p in (ALL_DEVICE, HOST_OPT, HOST_PARAMS, HOST_ALL, DISK_OPT, DISK_PARAMS)
+}
 
 
 def get_policy(name: str) -> PlacementPolicy:

@@ -79,8 +79,13 @@ class OffloadedFunction:
         if unknown:
             raise ValueError(f"refs for unknown arguments: {sorted(unknown)}")
         self._compiled: dict[Any, Callable] = {}
-        #: host-stream executors, one per streamed-arg set (see stream_host)
+        #: host-stream executors, keyed on (streamed-arg set, per-arg memory
+        #: kinds, engine identity) — see stream_host.  Keying on the arg set
+        #: alone reused a stale executor (wrong engine / wrong tier) when the
+        #: caller switched PlacementPolicy between calls.
         self._stream_host_cache: dict[tuple, "HostStreamExecutor"] = {}
+        #: lazily-created spill store for DiskHost-kind streamed args
+        self._spill_store: Any = None
 
     # -- placement helpers ---------------------------------------------------
     def mesh(self) -> Mesh:
@@ -187,6 +192,8 @@ class OffloadedFunction:
         mode: str = "prefetch",
         engine: Any = None,
         stats: Any = None,
+        policy: Any = None,
+        spill_dir: Any = None,
         **kwargs: Any,
     ) -> Any:
         """Run with streamed refs served by the *host-side* transfer engine.
@@ -200,9 +207,20 @@ class OffloadedFunction:
         ``PrefetchSpec(distance="auto")`` (runtime-adaptive window) and is
         numerically identical to ``__call__``/``eager``.
 
+        ``policy`` (a :class:`~repro.core.memkind.PlacementPolicy`)
+        overrides the home tier of the streamed arguments at call time —
+        its ``params`` kind applies to every streamed ref.  A non-XLA kind
+        (``DiskHost``) spills each block to a chunk-granular
+        :class:`~repro.core.spillstore.SpillStore` (under ``spill_dir``, or
+        a private temp dir) and streams it through the engine's two-stage
+        disk->host->device pipeline — same values, one more hierarchy
+        level.
+
         The executor (jitted per-block apply + engine worker) is cached per
-        streamed-arg set; ``engine`` therefore binds on the first call for
-        a given set.  Call :meth:`close` to release the workers.
+        (streamed-arg set, per-arg memory kind, engine identity); switching
+        ``policy`` or ``engine`` between calls therefore builds a fresh
+        executor instead of silently reusing a stale one.  Call
+        :meth:`close` to release the workers.
         """
         from repro.core.hoststream import HostStreamExecutor
 
@@ -213,6 +231,10 @@ class OffloadedFunction:
             return self(*args, **kwargs)
         spec = self._ref(stream_names[0]).prefetch
         g = spec.elements_per_fetch
+        kinds = tuple(
+            (policy.params if policy is not None else self._ref(n).kind)
+            for n in stream_names
+        )
         fixed = {
             n: v if isinstance(v, jax.Array) else self.place(n, v)
             for n, v in bound.arguments.items()
@@ -226,9 +248,14 @@ class OffloadedFunction:
             )
 
         # the executor (and its jitted per-block apply + engine worker) is
-        # built once per streamed-arg set and reused across calls; the fixed
-        # arguments travel in the carry, so new values don't retrace
-        key = tuple(stream_names)
+        # built once per (streamed-arg set, kinds, engine) and reused across
+        # calls; the fixed arguments travel in the carry, so new values
+        # don't retrace
+        key = (
+            tuple(stream_names),
+            tuple(k.jax_kind for k in kinds),
+            id(engine) if engine is not None else None,
+        )
         ex = self._stream_host_cache.get(key)
         if ex is None:
             base = self._fn
@@ -247,14 +274,51 @@ class OffloadedFunction:
             )
             for i in range(0, n_rows, g)
         ]
+        if any(not k.jax_addressable for k in kinds):
+            groups = [
+                self._spill(f"g{i:04d}", grp, spill_dir)
+                for i, grp in enumerate(groups)
+            ]
         _, outs = ex.run(fixed, groups, mode=mode, prefetch=spec, stats=stats)
         return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *outs)
 
+    def _spill(self, key: str, group: Any, spill_dir: Any) -> Any:
+        """Move one block to the DiskHost tier: persist it in the spill
+        store and return the memory-mapped view tree.  A privately created
+        temp store is ephemeral (deleted on close); a caller-supplied
+        ``spill_dir`` is durable and never deleted."""
+        import pathlib
+
+        from repro.core.spillstore import SpillStore
+
+        if self._spill_store is not None and spill_dir is not None:
+            if pathlib.Path(spill_dir) != self._spill_store.dir:
+                raise ValueError(
+                    f"stream_host already bound a spill store at "
+                    f"{str(self._spill_store.dir)!r}; close() before "
+                    f"switching to spill_dir={str(spill_dir)!r}"
+                )
+        if self._spill_store is None:
+            ephemeral = spill_dir is None
+            if ephemeral:
+                import tempfile
+
+                spill_dir = tempfile.mkdtemp(
+                    prefix=f"repro-spill-{self._fn.__name__}-"
+                )
+            self._spill_store = SpillStore(spill_dir, ephemeral=ephemeral)
+        self._spill_store.put(key, group)
+        return self._spill_store.get(key)
+
     def close(self) -> None:
-        """Shut down any host-stream executors (and their engine workers)."""
+        """Shut down any host-stream executors (and their engine workers),
+        and drop the spill store (deleting it if privately created)."""
         for ex in self._stream_host_cache.values():
             ex.close()
         self._stream_host_cache.clear()
+        if self._spill_store is not None:
+            self._spill_store.close()  # deletes iff the store is ephemeral
+            self._spill_store = None
 
     def lower(self, *args: Any, streamed: bool = True):
         """Lower without executing (dry-run path; keeps true memory kinds)."""

@@ -4,6 +4,13 @@ Batches are produced on the host (the paper's ``Host`` memory kind: a level
 the accelerator cannot address) and transferred with a bounded look-ahead of
 ``distance`` batches, so H2D input copies overlap the previous step's compute.
 ``distance=0`` is the paper's on-demand mode (the step stalls on its input).
+
+:class:`DiskShardLoader` extends the same pattern one level down the
+hierarchy: batches live as chunk files in a
+:class:`~repro.core.spillstore.SpillStore` (the ``DiskHost`` tier) and are
+served as memory-mapped views, so a disk-resident dataset streams to the
+device without ever materializing in host RAM — the bytes are read only
+when the H2D copy touches them, at most one look-ahead window at a time.
 """
 from __future__ import annotations
 
@@ -52,3 +59,39 @@ class PrefetchLoader:
         s, batch = self._ring.popleft()
         assert s == step
         return batch
+
+
+class DiskShardLoader:
+    """``make_batch`` over disk-resident shards (the ``DiskHost`` data tier).
+
+    ``write_shards`` spills batches into the store once (e.g. a dataset
+    conversion job); ``__call__(step)`` then returns the shard for ``step``
+    as a memory-mapped pytree — zero host-RAM cost until the transfer
+    engine or ``device_put`` reads the bytes.  Wrap in
+    :class:`PrefetchLoader` for look-ahead exactly like a RAM loader::
+
+        loader = PrefetchLoader(DiskShardLoader(store, n_shards), distance=2)
+    """
+
+    _KEY = "shard_{:06d}"
+
+    def __init__(self, store, n_shards: int, *, template: Optional[Pytree] = None):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self._store = store
+        self._n = n_shards
+        self._template = template
+
+    @classmethod
+    def write_shards(
+        cls, store, make_batch: Callable[[int], Pytree], n_shards: int
+    ) -> "DiskShardLoader":
+        """Spill ``n_shards`` batches into ``store`` and return a loader
+        over them (one chunk file per shard: one disk request each)."""
+        for i in range(n_shards):
+            store.put(cls._KEY.format(i), make_batch(i))
+        return cls(store, n_shards)
+
+    def __call__(self, step: int) -> Pytree:
+        key = self._KEY.format(step % self._n)
+        return self._store.get(key, template=self._template)

@@ -49,6 +49,8 @@ def build_trainer(
     policy=None,
     stream_opt: bool = False,
     opt_stream_groups: int = 4,
+    spill_dir=None,
+    host_budget_mb=None,
 ):
     """Assemble (driver, jitted step) for a config on a mesh.
 
@@ -64,11 +66,19 @@ def build_trainer(
     live on the host as numpy groups and stream through
     ``repro.core.engine.TransferEngine`` (coalesced, pipelined write-back,
     ``distance="auto"``) during the update itself.
+
+    With a ``DISK_OPT`` policy (or an explicit ``spill_dir``), moment
+    groups that do not fit ``host_budget_mb`` spill to a ``DiskHost``
+    :class:`~repro.core.spillstore.SpillStore` and stream through the
+    engine's two-stage disk->host->device pipeline — optimizer state
+    larger than host RAM, same update values.
     """
     from repro.core import memkind as mk
+    from repro.core import spillstore as st_mod
     from repro.core.engine import TransferEngine
     from repro.core.hoststream import StreamStats
     from repro.core.refspec import PrefetchSpec
+    from repro.core.spillstore import SpillStore
 
     policy = policy or mk.ALL_DEVICE
     plan = sh.make_plan(mesh, mode="train")
@@ -119,16 +129,58 @@ def build_trainer(
             opt = _opt_home(opt)  # stream back (paper 'rw' write-back)
         return {"params": params, "opt": opt}, metrics
 
+    log = logging.getLogger("repro.train")
     if stream_opt and policy.opt_state.jax_kind == "device":
-        logging.getLogger("repro.train").warning(
+        log.warning(
             "--stream-opt ignored: policy %r keeps optimizer state on "
             "device; use --policy host_opt (or host_all) to stream it",
             policy.name,
         )
+    if not policy.params.jax_addressable or not policy.kv_cache.jax_addressable:
+        # this launcher only streams *optimizer state* from disk; disk-kind
+        # params/kv resolve to their staging kind (host), which must not
+        # pass silently for someone expecting larger-than-RAM weights
+        log.warning(
+            "policy %r places params/kv at the DiskHost tier, but the "
+            "trainer has no disk-params streaming path: they fall back to "
+            "the host staging kind (use @offload(...).stream_host(policy="
+            "DISK_PARAMS) for disk-resident weights)",
+            policy.name,
+        )
+    if not stream_opt and not policy.opt_state.jax_addressable:
+        log.warning(
+            "policy %r without --stream-opt never touches disk: the "
+            "DiskHost kind resolves to its host staging kind for bulk "
+            "step-boundary copies; pass --stream-opt to stream the "
+            "moments through the spill store",
+            policy.name,
+        )
     if stream_opt and policy.opt_state.jax_kind != "device":
-        # engine-streamed optimizer: moments stay host numpy between steps
+        # engine-streamed optimizer: moments stay host numpy between steps;
+        # under a DISK_OPT policy (or a host policy with an explicit
+        # spill_dir + budget) groups beyond the host-RAM budget live on
+        # disk and stream disk->host->device
         engine = TransferEngine()
         stream_stats = StreamStats()
+        spill_store = None
+        use_spill = not policy.opt_state.jax_addressable or (
+            spill_dir is not None and host_budget_mb is not None
+        )
+        if spill_dir is not None and host_budget_mb is None and not use_spill:
+            log.warning(
+                "--spill-dir ignored: policy %r is host-resident and no "
+                "--host-budget-mb overflow threshold was given",
+                policy.name,
+            )
+        if use_spill:
+            ephemeral = spill_dir is None
+            if ephemeral:
+                import tempfile
+
+                spill_dir = tempfile.mkdtemp(prefix="repro-spill-opt-")
+            # a run-private temp store is ephemeral: no per-put durability
+            # cost on the train hot path, deleted by the driver's close()
+            spill_store = SpillStore(spill_dir, ephemeral=ephemeral)
         streamed = st.make_streamed_train_step(
             cfg,
             opt_cfg,
@@ -140,15 +192,36 @@ def build_trainer(
             ),
             engine=engine,
             stats=stream_stats,
+            spill_store=spill_store,
         )
+
+        budget_bytes = int(host_budget_mb * 1e6) if host_budget_mb else 0
+
+        def _spilled(opt):
+            return st.spill_opt_state(
+                opt,
+                spill_store,
+                n_groups=opt_stream_groups,
+                host_budget_bytes=budget_bytes,
+            )
 
         def init_state_streamed():
             params, _ = st.init_train_state(jax.random.PRNGKey(seed), cfg)
             with mesh:
                 params = jax.device_put(params, p_sh)
-            return {"params": params, "opt": st.host_opt_state(params)}
+            opt = st.host_opt_state(params)
+            if spill_store is not None:
+                opt = _spilled(opt)
+            return {"params": params, "opt": opt}
 
         def wrapped_step_streamed(state, batch):
+            if spill_store is not None and not any(
+                st_mod.is_disk_leaf(x)
+                for x in jax.tree.leaves(state["opt"]["leaves"])
+            ):
+                # checkpoint restore hands back plain host arrays — the
+                # budget must be re-imposed or the whole state sits in RAM
+                state = {**state, "opt": _spilled(state["opt"])}
             with mesh:
                 return streamed(state, batch)
 
@@ -160,6 +233,7 @@ def build_trainer(
             fail_at=fail_at,
             engine=engine,
             stream_stats=stream_stats,
+            spill_store=spill_store,
         )
         return driver
 
@@ -184,14 +258,32 @@ def main() -> int:
     ap.add_argument(
         "--policy",
         default="all_device",
-        choices=["all_device", "host_opt", "host_params", "host_all"],
-        help="memory-kind placement policy (paper memory kinds)",
+        choices=[
+            "all_device", "host_opt", "host_params", "host_all",
+            "disk_opt", "disk_params",
+        ],
+        help="memory-kind placement policy (paper memory kinds; disk_* "
+        "spill to the DiskHost tier)",
     )
     ap.add_argument(
         "--stream-opt",
         action="store_true",
         help="stream host-kind optimizer state through the transfer engine "
         "(coalesced + pipelined write-back + adaptive prefetch distance)",
+    )
+    ap.add_argument(
+        "--spill-dir",
+        default=None,
+        help="directory for the DiskHost spill store (default: a temp dir "
+        "when a disk policy is active)",
+    )
+    ap.add_argument(
+        "--host-budget-mb",
+        type=float,
+        default=None,
+        help="host-RAM budget for streamed optimizer state; moment groups "
+        "beyond it spill to the DiskHost tier (0/unset with a disk "
+        "policy: spill everything)",
     )
     args = ap.parse_args()
 
@@ -218,6 +310,8 @@ def main() -> int:
         seed=args.seed,
         policy=mk.get_policy(args.policy),
         stream_opt=args.stream_opt,
+        spill_dir=args.spill_dir,
+        host_budget_mb=args.host_budget_mb,
     )
     t0 = time.time()
     driver.run()

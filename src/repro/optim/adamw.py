@@ -17,6 +17,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Pytree = Any
 
@@ -44,6 +45,13 @@ def adamw_init(params: Pytree) -> Pytree:
         }
 
     return {"leaves": jax.tree.map(leaf, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_bytes(params: Pytree) -> int:
+    """Bytes the AdamW state for ``params`` occupies (3 f32 copies per leaf)
+    — what a host-RAM budget compares against when deciding how much of the
+    state spills to the ``DiskHost`` tier."""
+    return sum(3 * 4 * int(np.prod(p.shape)) for p in jax.tree.leaves(params))
 
 
 def global_norm(tree: Pytree) -> jnp.ndarray:

@@ -11,8 +11,10 @@ The driver owns everything a pod-scale job needs around the compiled step:
     identical data (bit-identical loss curves across failures — tested),
   * failure injection hooks for testing (``fail_at`` raises mid-run),
   * transfer-engine lifecycle for the streamed-optimizer path: the driver
-    owns the ``TransferEngine`` passed to it, logs its per-run stream stats,
-    and closes it when the run completes (or finally fails).
+    owns the ``TransferEngine`` passed to it, logs its per-run stream stats
+    (including per-tier disk counters), and closes it when the run
+    completes (or finally fails) — followed by the ``DiskHost`` spill
+    store, so no in-flight disk fetch outlives its chunk files.
 
 On a real cluster the restart loop wraps `jax.distributed` re-initialization
 and an elastic re-mesh (repro.runtime.elastic); on this container the same
@@ -63,6 +65,7 @@ class TrainDriver:
         fail_at: Optional[set[int]] = None,  # test hook: raise at these steps
         engine: Optional[Any] = None,  # repro.core.engine.TransferEngine
         stream_stats: Optional[Any] = None,  # repro.core.hoststream.StreamStats
+        spill_store: Optional[Any] = None,  # repro.core.spillstore.SpillStore
     ) -> None:
         self.cfg = cfg
         self.step_fn = step_fn
@@ -77,6 +80,9 @@ class TrainDriver:
         #: run finishes or finally fails) — the streamed-optimizer path
         self.engine = engine
         self.stream_stats = stream_stats
+        #: DiskHost-tier spill store this driver owns (closed after the
+        #: engine so no in-flight disk fetch outlives its chunk files)
+        self.spill_store = spill_store
 
     # ------------------------------------------------------------------ run
     def _restore_or_init(self) -> tuple[int, Pytree]:
@@ -115,8 +121,19 @@ class TrainDriver:
                     s.writeback_drain_s,
                     s.distance_trace[-1] if s.distance_trace else None,
                 )
+                if s.disk_requests:
+                    log.info(
+                        "disk tier: %d requests (%.2f/group), %.1f MB, "
+                        "h2d-on-disk wait %.3fs",
+                        s.disk_requests,
+                        s.disk_requests_per_group,
+                        s.bytes_disk / 1e6,
+                        s.disk_wait_s,
+                    )
             if self.engine is not None:
                 self.engine.close()
+            if self.spill_store is not None:
+                self.spill_store.close()
 
     def _run_once(self) -> Pytree:
         start, state = self._restore_or_init()

@@ -99,6 +99,60 @@ def host_opt_state(params: Pytree) -> dict:
     }
 
 
+def _group_bounds(n: int, n_groups: int) -> np.ndarray:
+    """Contiguous leaf-group boundaries — shared by the streamed updater and
+    the spill partitioner so both see the same groups."""
+    return np.linspace(0, n, min(n_groups, n) + 1).astype(int)
+
+
+def _opt_group_key(i: int) -> str:
+    return f"opt_g{i:04d}"
+
+
+def spill_opt_state(
+    host_state: dict,
+    store,
+    *,
+    n_groups: int = 4,
+    host_budget_bytes: Optional[int] = None,
+) -> dict:
+    """Move trailing moment groups to the ``DiskHost`` tier under a host-RAM
+    budget.
+
+    Groups (the same contiguous leaf groups the streamed updater transfers)
+    are kept in host RAM front-to-back while they fit ``host_budget_bytes``;
+    the rest are written to ``store`` (one chunk per group — one disk
+    request per group when streamed) and replaced by memory-mapped views.
+    ``host_budget_bytes=None`` or 0 spills everything.  Abstract leaves
+    (``jax.eval_shape`` templates, driver restore) pass through untouched.
+    """
+    flat_s, treedef = jax.tree.flatten(
+        host_state["leaves"],
+        is_leaf=lambda x: isinstance(x, dict) and {"master", "m", "v"} <= set(x),
+    )
+    if not all(
+        isinstance(v, np.ndarray) for s in flat_s for v in jax.tree.leaves(s)
+    ):
+        return host_state  # abstract template (eval_shape) — nothing to spill
+    bounds = _group_bounds(len(flat_s), n_groups)
+    budget = host_budget_bytes or 0
+    used = 0
+    out: list = []
+    for i in range(len(bounds) - 1):
+        chunk = tuple(flat_s[bounds[i] : bounds[i + 1]])
+        nbytes = sum(v.nbytes for s in chunk for v in jax.tree.leaves(s))
+        if used + nbytes <= budget:
+            used += nbytes
+            out.extend(chunk)
+        else:
+            store.put(_opt_group_key(i), chunk)
+            out.extend(store.get(_opt_group_key(i)))
+    return {
+        "leaves": jax.tree.unflatten(treedef, out),
+        "step": host_state["step"],
+    }
+
+
 def make_streamed_opt_updater(
     opt_cfg: AdamWConfig,
     *,
@@ -107,6 +161,7 @@ def make_streamed_opt_updater(
     prefetch: Optional[PrefetchSpec] = None,
     mode: str = "prefetch",
     engine: Optional[TransferEngine] = None,
+    spill_store=None,
 ) -> Callable[..., tuple[Pytree, dict, dict]]:
     """Build ``update(grads, host_state, stats=None) -> (new_params,
     new_host_state, metrics)`` with host-resident optimizer state.
@@ -121,6 +176,13 @@ def make_streamed_opt_updater(
     globals); results agree to float32 rounding (the group-wise jit fuses
     differently than a whole-tree program), and the transfer schedule is
     the only structural difference.
+
+    Groups whose ``host_state`` leaves live at the ``DiskHost`` tier
+    (memory-mapped spill-store chunks — see :func:`spill_opt_state`) stream
+    in through the engine's two-stage disk->host->device pipeline, and
+    their updated moments are written back to ``spill_store`` after the
+    D2H drain, so the state never occupies more host RAM than the budgeted
+    groups plus the engine's staging pools.
     """
     prefetch = prefetch or PrefetchSpec(buffer_size=n_groups, distance=1)
 
@@ -152,6 +214,8 @@ def make_streamed_opt_updater(
         return executor_box[0]
 
     def update(grads, host_state, stats: Optional[StreamStats] = None):
+        from repro.core.spillstore import is_disk_leaf
+
         ex, new_params_box = _executor()
         new_params_box.clear()
         step = int(host_state["step"]) + 1
@@ -160,7 +224,7 @@ def make_streamed_opt_updater(
         flat_g, treedef = jax.tree.flatten(grads)
         flat_s = treedef.flatten_up_to(host_state["leaves"])
         n = len(flat_g)
-        bounds = np.linspace(0, n, min(n_groups, n) + 1).astype(int)
+        bounds = _group_bounds(n, n_groups)
         groups = [
             {
                 "g": tuple(flat_g[bounds[i] : bounds[i + 1]]),
@@ -170,6 +234,18 @@ def make_streamed_opt_updater(
         ]
 
         _, state_outs = ex.run(glob, groups, mode=mode, prefetch=prefetch, stats=stats)
+
+        # disk-homed groups go back to their home tier: write the updated
+        # moments to the spill store and keep only the memmap views
+        for i, grp in enumerate(groups):
+            if any(is_disk_leaf(v) for s in grp["s"] for v in jax.tree.leaves(s)):
+                if spill_store is None:
+                    raise RuntimeError(
+                        "optimizer state group streamed from the DiskHost "
+                        "tier but no spill_store was given to write it back"
+                    )
+                spill_store.put(_opt_group_key(i), state_outs[i])
+                state_outs[i] = spill_store.get(_opt_group_key(i))
 
         flat_new_p = [p for chunk in new_params_box for p in chunk]
         flat_new_s = [s for chunk in state_outs for s in chunk]
@@ -195,12 +271,16 @@ def make_streamed_train_step(
     prefetch: Optional[PrefetchSpec] = None,
     engine: Optional[TransferEngine] = None,
     stats: Optional[StreamStats] = None,
+    spill_store=None,
 ) -> Callable[[dict, Pytree], tuple[dict, dict]]:
     """``(state, batch) -> (state, metrics)`` with host-resident optimizer.
 
     ``state = {"params": device pytree, "opt": host_opt_state(...)}``.  The
     forward/backward half is jitted; the AdamW half streams the host-kind
     moments through the transfer engine (see ``make_streamed_opt_updater``).
+    With ``spill_store``, moment groups spilled to the ``DiskHost`` tier
+    (see :func:`spill_opt_state`) stream disk->host->device and write back
+    to disk.
     """
     grad_fn = jax.jit(make_grad_step(cfg, mesh, sharder))
     updater = make_streamed_opt_updater(
@@ -209,6 +289,7 @@ def make_streamed_train_step(
         n_groups=n_groups,
         prefetch=prefetch,
         engine=engine,
+        spill_store=spill_store,
     )
 
     def step_fn(state, batch):

@@ -1,0 +1,166 @@
+"""SpillStore unit tests: the DiskHost tier's chunk format and lifecycle."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spillstore import SpillStore, is_disk_leaf
+from repro.data.loader import DiskShardLoader, PrefetchLoader
+
+
+def _chunk(rng):
+    return {
+        "f32": rng.standard_normal((5, 3)).astype(np.float32),
+        "bf16": np.asarray(jnp.asarray(rng.standard_normal((7,)), jnp.bfloat16)),
+        "i32": rng.integers(-9, 9, (2, 2)).astype(np.int32),
+        "empty": np.zeros((0, 4), np.float32),
+        "nested": (rng.standard_normal((1,)).astype(np.float64),),
+    }
+
+
+def test_put_get_roundtrip_bitwise(tmp_path):
+    rng = np.random.default_rng(0)
+    chunk = _chunk(rng)
+    store = SpillStore(tmp_path)
+    store.put("c0", chunk)
+    out = store.get("c0")
+    assert jax.tree.structure(out) == jax.tree.structure(chunk)
+    for got, src in zip(jax.tree.leaves(out), jax.tree.leaves(chunk)):
+        # zero-length leaves have no bytes to map: they come back as plain
+        # (empty) ndarrays, which every consumer treats as host-resident
+        assert is_disk_leaf(got) or got.size == 0
+        assert got.dtype == src.dtype  # incl. bf16 via the re-view trick
+        np.testing.assert_array_equal(np.asarray(got), src)
+    assert store.nbytes("c0") == sum(x.nbytes for x in jax.tree.leaves(chunk))
+
+
+def test_atomic_overwrite_keeps_old_mapping_valid(tmp_path):
+    store = SpillStore(tmp_path)
+    store.put("k", {"x": np.arange(8, dtype=np.float32)})
+    old = store.get("k")
+    old_copy = np.array(old["x"])
+    store.put("k", {"x": np.arange(8, dtype=np.float32) * 10})
+    # the old mapping still reads the old bytes (open fd holds the inode)
+    np.testing.assert_array_equal(np.asarray(old["x"]), old_copy)
+    np.testing.assert_array_equal(np.array(store.get("k")["x"]), old_copy * 10)
+
+
+def test_fresh_process_restart_needs_template(tmp_path):
+    """The manifest survives on disk; a fresh store instance (new process)
+    reconstructs chunks against a template — or flags the missing treedef."""
+    rng = np.random.default_rng(1)
+    chunk = _chunk(rng)
+    SpillStore(tmp_path).put("c", chunk)
+    fresh = SpillStore(tmp_path)
+    assert "c" in fresh
+    with pytest.raises(KeyError, match="template"):
+        fresh.get("c")
+    out = fresh.get("c", template=chunk)
+    for got, src in zip(jax.tree.leaves(out), jax.tree.leaves(chunk)):
+        np.testing.assert_array_equal(np.asarray(got), src)
+    # single-leaf chunks need no template at all
+    SpillStore(tmp_path).put("single", np.arange(4.0, dtype=np.float32))
+    fresh2 = SpillStore(tmp_path)
+    np.testing.assert_array_equal(
+        np.asarray(fresh2.get("single")), np.arange(4.0, dtype=np.float32)
+    )
+
+
+def test_delete_and_manifest_consistency(tmp_path):
+    store = SpillStore(tmp_path)
+    store.put("a", np.ones(3, np.float32))
+    store.put("b", np.zeros(5, np.float32))
+    assert list(store.keys()) == ["a", "b"]
+    store.delete("a")
+    assert list(store.keys()) == ["b"]
+    with pytest.raises(KeyError):
+        store.get("a")
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(manifest) == {"b"}
+
+
+def test_sanitized_keys_never_collide(tmp_path):
+    """Regression: 'g/1' and 'g__1' both sanitize to 'g__1' — the digest
+    suffix must keep their chunk files distinct."""
+    store = SpillStore(tmp_path)
+    a = np.full(4, 1.0, np.float32)
+    b = np.full(4, 2.0, np.float32)
+    store.put("g/1", a)
+    store.put("g__1", b)
+    np.testing.assert_array_equal(np.asarray(store.get("g/1")), a)
+    np.testing.assert_array_equal(np.asarray(store.get("g__1")), b)
+
+
+def test_all_empty_chunk_get_does_not_mmap_empty_file(tmp_path):
+    """A chunk whose leaves total zero bytes writes an empty file; get()
+    must not try to mmap it (mmap rejects empty files)."""
+    store = SpillStore(tmp_path)
+    chunk = {"a": np.zeros((0, 3), np.float32), "b": np.zeros((0,), np.int32)}
+    store.put("empty", chunk)
+    out = store.get("empty")
+    for got, src in zip(jax.tree.leaves(out), jax.tree.leaves(chunk)):
+        assert got.shape == src.shape and got.dtype == src.dtype
+
+
+def test_ephemeral_store_skips_manifest_flush_and_deletes_on_close(tmp_path):
+    d = tmp_path / "eph"
+    store = SpillStore(d, ephemeral=True)
+    store.put("k", np.ones(4, np.float32))
+    assert not (d / "manifest.json").exists()  # no per-put flush
+    store.close()
+    assert not d.exists()  # run-private contents removed
+    # durable stores keep files and manifest by default
+    d2 = tmp_path / "dur"
+    s2 = SpillStore(d2)
+    s2.put("k", np.ones(4, np.float32))
+    s2.close()
+    assert d2.exists() and (d2 / "manifest.json").exists()
+
+
+def test_offload_close_never_deletes_user_spill_dir(tmp_path):
+    """Regression: after a close() of a private temp store, a later call
+    with an explicit spill_dir must not inherit the delete-on-close."""
+    from repro.core import memkind as mk
+    from repro.core.offload import offload
+    from repro.core.refspec import OffloadRef, PrefetchSpec
+
+    spec = PrefetchSpec(buffer_size=4, elements_per_fetch=2, distance=1)
+
+    @offload(refs=dict(x=OffloadRef(kind=mk.PINNED_HOST, prefetch=spec)))
+    def k(x):
+        return x * 3.0
+
+    x = np.arange(8, dtype=np.float32).reshape(8, 1)
+    k.stream_host(x, policy=mk.DISK_PARAMS)  # private temp store
+    tmp_store_dir = k._spill_store.dir
+    k.close()
+    assert not tmp_store_dir.exists()
+    user_dir = tmp_path / "precious"
+    k.stream_host(x, policy=mk.DISK_PARAMS, spill_dir=user_dir)
+    k.close()
+    assert user_dir.exists()  # user data survives close()
+
+
+def test_disk_shard_loader_streams_without_host_copy(tmp_path):
+    """Disk-resident data shards: memmap views all the way to device_put;
+    round-robin over shards; composes with PrefetchLoader."""
+    store = SpillStore(tmp_path)
+    rng = np.random.default_rng(2)
+    shards = [
+        {"tokens": rng.integers(0, 100, (2, 8)).astype(np.int32)} for _ in range(3)
+    ]
+    loader = DiskShardLoader.write_shards(store, lambda i: shards[i], 3)
+    got = loader(1)
+    assert is_disk_leaf(got["tokens"])  # no host materialization
+    np.testing.assert_array_equal(np.asarray(got["tokens"]), shards[1]["tokens"])
+    np.testing.assert_array_equal(  # round-robin reuse
+        np.asarray(loader(4)["tokens"]), shards[1]["tokens"]
+    )
+    pre = PrefetchLoader(loader, distance=2)
+    for step in range(5):
+        batch = pre(step)
+        np.testing.assert_array_equal(
+            np.asarray(batch["tokens"]), shards[step % 3]["tokens"]
+        )
