@@ -20,11 +20,12 @@ SUITES = {
     "kernels": ("benchmarks.kernel_streaming", "kernel-level DMA schedule study"),
     "engine": ("benchmarks.engine_compare", "coalesced transfer engine vs seed per-leaf schedule"),
     "disk": ("benchmarks.disk_tier", "DiskHost three-level streaming (modeled disk link)"),
+    "serve": ("benchmarks.serve_paged", "paged KV-cache serving vs per-step placement"),
 }
 
 #: the suites driven purely by the deterministic LinkModel emulation —
 #: meaningful on a noisy CI runner, unlike the wall-clock studies
-SMOKE_SUITES = ["engine", "disk"]
+SMOKE_SUITES = ["engine", "disk", "serve"]
 
 
 def main() -> int:

@@ -31,6 +31,13 @@ from repro.core.engine import (
     PAPER_EPIPHANY_LINK,
     TransferEngine,
 )
+from repro.core.kvpager import (
+    KVPager,
+    KVPagerConfig,
+    PageStream,
+    assemble_view,
+    paged_cache_supported,
+)
 from repro.core.offload import offload
 from repro.core.prefetch import eager_transfer, fetch_chunk, stream_blocks, streamed_scan
 from repro.core.refspec import AUTO, Access, OffloadRef, PrefetchSpec
@@ -75,4 +82,9 @@ __all__ = [
     "HostStreamExecutor",
     "StreamStats",
     "LocalCopyCache",
+    "KVPager",
+    "KVPagerConfig",
+    "PageStream",
+    "assemble_view",
+    "paged_cache_supported",
 ]

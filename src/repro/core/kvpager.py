@@ -1,0 +1,625 @@
+"""Paged hierarchical KV cache — the serving path's memory-kind consumer.
+
+The paper's claim ("compute with data sets of arbitrarily large size" §3.1)
+applied to decode: each request's KV cache is split along the context axis
+into fixed-size **pages** (``page_len`` tokens, all layers — one transfer
+group each).  Only a *hot window* — the page currently being written plus
+the last ``hot_pages`` full pages — is device-resident between steps; cold
+pages live at their home kind:
+
+  ``Device``      pages stay ``jax.Array``s (nothing ever moves),
+  ``PinnedHost``  host numpy trees (DMA-reachable DRAM),
+  ``DiskHost``    :class:`repro.core.spillstore.SpillStore` memmap chunks
+                  (one page group = one chunk file = one disk request).
+
+Per decode step the :class:`PageStream` fetches every cold page of every
+active request through the :class:`~repro.core.engine.TransferEngine` —
+coalesced (one H2D request per page group), pipelined ahead of consumption
+under a **per-request** :class:`~repro.core.engine.AdaptiveDistance`
+window (``distance="auto"``), and speculatively prefetched for step ``t+1``
+while step ``t``'s decode computes.  Pages crossing out of the hot window
+are written back through the engine's pipelined D2H drain and re-homed.
+
+The dense cache view the decode step consumes is rebuilt per step by
+:func:`assemble_view` — a *separate* jit from the decode executable, so
+paged decode runs the exact same program as unpaged decode and the two are
+bitwise-equal by construction (pinned in ``tests/test_serve.py``); the
+device only ever *retains* the hot window (``device_resident_bytes``),
+which is how host/disk-homed caches decode contexts larger than the device
+budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import memkind as mk
+from repro.core.engine import AdaptiveDistance, TransferEngine
+from repro.core.hoststream import StreamStats
+from repro.core.refspec import AUTO
+
+__all__ = [
+    "KVPagerConfig",
+    "PageRecord",
+    "PageTable",
+    "PageStream",
+    "KVPager",
+    "assemble_view",
+    "paged_cache_supported",
+]
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# page math helpers
+# ---------------------------------------------------------------------------
+
+
+def _time_axis(leaf) -> int:
+    """Context axis of a k/v cache leaf: (B, T, K, H) or stacked
+    (L, B, T, K, H) — always third from the right + 1 head dims."""
+    return np.ndim(leaf) - 3
+
+
+def _batch_axis(leaf) -> int:
+    return np.ndim(leaf) - 4
+
+
+def paged_cache_supported(cache_template: Pytree) -> bool:
+    """True iff every cache leaf is a pageable full-attention k/v tensor.
+
+    Ring buffers (``slot_pos`` shared across the batch) and recurrent
+    states (no context axis) cannot be paged along the context dimension;
+    serving falls back to the unpaged path for those archs.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(cache_template)[0]
+    if not flat:
+        return False
+    for path, leaf in flat:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        if name not in ("k", "v") or np.ndim(leaf) < 4:
+            return False
+    return True
+
+
+def assemble_view(view) -> Pytree:
+    """Concatenate a per-slot page view into the dense cache tree.
+
+    ``view``: tuple (over batch slots) of tuples (over pages) of page
+    pytrees.  Pages concatenate along the context axis, slots along the
+    batch axis.  Pure concatenation — bit-exact reconstruction of the
+    unpaged cache tensor.
+    """
+    slots = [
+        jax.tree.map(lambda *ps: jnp.concatenate(ps, axis=_time_axis(ps[0])), *pages)
+        for pages in view
+    ]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=_batch_axis(xs[0])), *slots)
+
+
+# ---------------------------------------------------------------------------
+# configuration / page table
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPagerConfig:
+    """Paging knobs for one serving session."""
+
+    #: tokens per page (all layers of one page = one transfer group)
+    page_len: int = 32
+    #: full pages kept device-resident behind the write position (the hot
+    #: attention window; the partially-written current page is always hot)
+    hot_pages: int = 1
+    #: home kind of cold pages (device | pinned_host | disk_host)
+    kind: Union[mk.MemKind, str] = mk.DEVICE
+    #: per-request in-flight fetch window: an int, or ``"auto"`` for a
+    #: per-request AdaptiveDistance controller
+    distance: Union[int, str] = AUTO
+    min_distance: int = 1
+    max_distance: int = 8
+    wait_eps_s: float = 100e-6
+    shrink_after: int = 4
+
+    def __post_init__(self) -> None:
+        if self.page_len < 1:
+            raise ValueError("page_len must be >= 1")
+        if self.hot_pages < 0:
+            raise ValueError("hot_pages must be >= 0")
+
+
+#: page residency states
+_DEVICE, _COLD, _WB, _ZERO = "device", "cold", "wb", "zero"
+
+
+@dataclasses.dataclass
+class PageRecord:
+    """One page's residency: device-resident pytree, cold home pytree
+    (numpy / spill-store memmaps), in-flight writeback, or still-zero."""
+
+    state: str = _ZERO
+    dev: Optional[Pytree] = None
+    host: Optional[Pytree] = None
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Per-request page table: residency of every page of one request's
+    cache, plus the next context position to write."""
+
+    rid: int
+    slot: Optional[int]  # batch slot; None while evicted
+    pos: int  # next absolute position the decode step writes
+    records: list[PageRecord]
+
+
+# ---------------------------------------------------------------------------
+# the fetch pipeline
+# ---------------------------------------------------------------------------
+
+
+class PageStream:
+    """Pipelined cold-page fetcher over a :class:`TransferEngine`.
+
+    ``push`` enqueues a ``(rid, page)`` group; at most ``window(rid)``
+    groups per request are submitted to the engine at once (the rest stay
+    pending).  ``pop`` waits the group's future, tops the windows back up,
+    and returns the staged device tree.  Under ``distance="auto"`` each
+    request's :class:`AdaptiveDistance` controller observes the request's
+    *per-step* aggregate stall (``step_done``), not per-group waits: a
+    shrink that re-introduces a stall is then stalled on the very next
+    observation, which is what arms the controller's sticky floor — per
+    group, a clean in-window pop always lands between the shrink and the
+    stall and the window oscillates forever.  Keys pushed speculatively
+    for a step that never consumes them (the request finished or was
+    evicted) are dropped by ``sync`` and counted.
+    """
+
+    def __init__(
+        self,
+        engine: TransferEngine,
+        *,
+        distance: Union[int, str] = AUTO,
+        min_distance: int = 1,
+        max_distance: int = 8,
+        wait_eps_s: float = 100e-6,
+        shrink_after: int = 4,
+    ) -> None:
+        self._engine = engine
+        self._auto = distance == AUTO
+        self._static = None if self._auto else max(1, int(distance))
+        self._ctl_kw = dict(
+            initial=min_distance,
+            min_distance=min_distance,
+            max_distance=max_distance,
+            wait_eps_s=wait_eps_s,
+            shrink_after=shrink_after,
+        )
+        self._controllers: dict[int, AdaptiveDistance] = {}
+        self._pending: "OrderedDict[tuple, Pytree]" = OrderedDict()
+        self._inflight: "OrderedDict[tuple, Any]" = OrderedDict()
+        self._seq = 0
+        #: per-request stall accumulated since the last ``step_done``
+        self._step_waits: dict[int, float] = {}
+        #: speculative pushes that were never consumed (waste metric)
+        self.stale_drops = 0
+
+    def window(self, rid: int) -> int:
+        if not self._auto:
+            return self._static
+        ctl = self._controllers.get(rid)
+        if ctl is None:
+            ctl = self._controllers[rid] = AdaptiveDistance(**self._ctl_kw)
+        return ctl.distance
+
+    def _inflight_of(self, rid: int) -> int:
+        return sum(1 for (r, _p) in self._inflight if r == rid)
+
+    def _submit(self, key: tuple, tree: Pytree):
+        fut = self._engine.submit_group(self._seq, tree)
+        self._seq += 1
+        self._inflight[key] = fut
+        return fut
+
+    def _top_up(self) -> None:
+        for key in list(self._pending):
+            if self._inflight_of(key[0]) < self.window(key[0]):
+                self._submit(key, self._pending.pop(key))
+
+    def push(self, key: tuple, tree: Pytree) -> None:
+        if key in self._pending or key in self._inflight:
+            return
+        self._pending[key] = tree
+        self._top_up()
+
+    def pop(self, key: tuple, tree: Pytree, stats: StreamStats) -> Pytree:
+        fut = self._inflight.pop(key, None)
+        if fut is None:
+            # never prefetched (cold start / late table change): fetch now —
+            # the paper's on-demand penalty, paid only at boundaries
+            self._pending.pop(key, None)
+            fut = self._submit(key, tree)
+            self._inflight.pop(key)
+        w = fut.wait()
+        rid = key[0]
+        stats.n_transfers += 1
+        stats.n_groups += 1
+        stats.h2d_requests += fut.n_requests
+        stats.bytes_h2d += fut.nbytes
+        stats.disk_requests += fut.disk_requests
+        stats.bytes_disk += fut.disk_nbytes
+        stats.transfer_wait_s += w
+        stats.wait_per_group.append(w)
+        stats.disk_wait_s += fut.disk_wait_s
+        stats.disk_wait_per_group.append(fut.disk_wait_s)
+        if self._auto:
+            self._step_waits[rid] = self._step_waits.get(rid, 0.0) + w
+        stats.distance_trace.append(self.window(rid))
+        self._top_up()
+        return fut.group()
+
+    def step_done(self) -> None:
+        """Feed each request's controller its aggregate stall for the step
+        just consumed (call after the step's pops, before the next
+        ``push`` wave so the adapted window applies immediately)."""
+        if not self._auto:
+            return
+        for rid, w in self._step_waits.items():
+            self.window(rid)  # ensure the controller exists
+            self._controllers[rid].observe(w)
+        self._step_waits.clear()
+        self._top_up()
+
+    def sync(self, valid: set) -> None:
+        """Drop queued/in-flight keys outside ``valid`` (stale speculation).
+        In-flight futures complete on the worker regardless; only the
+        references are released."""
+        for key in [k for k in self._pending if k not in valid]:
+            del self._pending[key]
+            self.stale_drops += 1
+        for key in [k for k in self._inflight if k not in valid]:
+            del self._inflight[key]
+            self.stale_drops += 1
+
+    def forget(self, rid: int) -> None:
+        """Release a finished request's controller state (the session
+        serves unboundedly many requests; per-rid state must not grow
+        with the request count)."""
+        self._controllers.pop(rid, None)
+        self._step_waits.pop(rid, None)
+
+
+# ---------------------------------------------------------------------------
+# the pager
+# ---------------------------------------------------------------------------
+
+
+class KVPager:
+    """Per-request paged KV-cache manager over a batched decode cache.
+
+    Owns the page tables of every live request, the residency state
+    machine (hot device window / cold home kind / zero future pages), the
+    fetch stream, and the demotion writebacks.  The serving loop drives it:
+
+    ``admit``      split a prefilled per-slot cache into pages, demote the
+                   pages behind the hot window to the home kind.
+    ``prefetch``   push every cold page of every active request into the
+                   stream (speculative for the next step; deduped).
+    ``view``       pop this step's cold pages (waits only on groups the
+                   window did not cover) and return the per-slot page view
+                   for :func:`assemble_view` / the paged decode step.
+    ``update_current`` re-slice each active slot's partially-written page
+                   out of the decode step's cache output (the only page a
+                   decode step mutates).
+    ``advance``    after ``pos`` moves past a page boundary: demote pages
+                   that fell out of the hot window (pipelined D2H).
+    ``evict`` / ``readmit`` park a request's device pages at the host
+                   (freeing its slot) and later resume it cold.
+    """
+
+    def __init__(
+        self,
+        cache_template: Pytree,
+        config: KVPagerConfig,
+        *,
+        slots: int,
+        engine: TransferEngine,
+        store=None,
+    ) -> None:
+        """``cache_template``: abstract per-slot cache tree (batch dim 1,
+        context dim = the padded maximum length, a multiple of
+        ``page_len``)."""
+        if not paged_cache_supported(cache_template):
+            raise ValueError(
+                "paged KV serving requires a full-attention k/v cache "
+                "(ring slot_pos / recurrent states cannot be paged)"
+            )
+        self.config = config
+        self.kind = mk.as_kind(config.kind)
+        self.slots = slots
+        self.engine = engine
+        self.store = store
+        if self.kind == mk.DISK_HOST and store is None:
+            raise ValueError("kind=disk_host requires a SpillStore")
+        leaves = jax.tree.leaves(cache_template)
+        self.max_len = leaves[0].shape[_time_axis(leaves[0])]
+        if self.max_len % config.page_len != 0:
+            raise ValueError(
+                f"cache length {self.max_len} must be a multiple of "
+                f"page_len {config.page_len}"
+            )
+        self.n_pages = self.max_len // config.page_len
+        page_shapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                tuple(
+                    config.page_len if d == _time_axis(l) else s
+                    for d, s in enumerate(l.shape)
+                ),
+                l.dtype,
+            ),
+            cache_template,
+        )
+        self.page_nbytes = sum(
+            int(np.prod(s.shape)) * s.dtype.itemsize
+            for s in jax.tree.leaves(page_shapes)
+        )
+        self._zero_page = jax.jit(
+            lambda: jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), page_shapes)
+        )()
+        self._split = jax.jit(self._split_fn)
+        self._extract = jax.jit(self._extract_fn)
+        self.tables: dict[int, PageTable] = {}
+        self._by_slot: dict[int, PageTable] = {}
+        self.stream = PageStream(
+            engine,
+            distance=config.distance,
+            min_distance=config.min_distance,
+            max_distance=config.max_distance,
+            wait_eps_s=config.wait_eps_s,
+            shrink_after=config.shrink_after,
+        )
+        self._wb_seq = 0
+        self._pending_demotions: list[tuple[PageTable, int]] = []
+        self.demoted_groups = 0
+        self.peak_resident_bytes = 0
+
+    # -- jitted page plumbing ------------------------------------------------
+    def _split_fn(self, cache_slot: Pytree) -> tuple:
+        L = self.config.page_len
+
+        def page(p):
+            return jax.tree.map(
+                lambda a: lax.slice_in_dim(
+                    a, p * L, (p + 1) * L, axis=_time_axis(a)
+                ),
+                cache_slot,
+            )
+
+        return tuple(page(p) for p in range(self.n_pages))
+
+    def _extract_fn(self, cache: Pytree, slot, start) -> Pytree:
+        def leaf(a):
+            starts = [jnp.zeros((), jnp.int32)] * a.ndim
+            sizes = list(a.shape)
+            starts[_batch_axis(a)] = slot
+            sizes[_batch_axis(a)] = 1
+            starts[_time_axis(a)] = start
+            sizes[_time_axis(a)] = self.config.page_len
+            return lax.dynamic_slice(a, starts, sizes)
+
+        return jax.tree.map(leaf, cache)
+
+    # -- page-table state machine --------------------------------------------
+    def current_page(self, table: PageTable) -> int:
+        return table.pos // self.config.page_len
+
+    def _hot_floor(self, table: PageTable) -> int:
+        return max(0, self.current_page(table) - self.config.hot_pages)
+
+    def _page_key(self, rid: int, p: int) -> str:
+        return f"kv/{rid}/p{p:05d}"
+
+    def admit(self, rid: int, slot: int, cache_slot: Pytree, n_tokens: int) -> PageTable:
+        """Install a freshly prefilled per-slot cache as a page table.
+        Pages behind the hot window are demoted (caller flushes)."""
+        pages = self._split(cache_slot)
+        cur = n_tokens // self.config.page_len
+        records = [
+            PageRecord(_DEVICE, dev=pg) if p <= cur else PageRecord(_ZERO)
+            for p, pg in enumerate(pages)
+        ]
+        table = PageTable(rid=rid, slot=slot, pos=n_tokens, records=records)
+        self.tables[rid] = table
+        self._by_slot[slot] = table
+        if self.kind != mk.DEVICE:
+            for p in range(self._hot_floor(table)):
+                self._demote(table, p)
+        return table
+
+    def _demote(self, table: PageTable, p: int) -> None:
+        rec = table.records[p]
+        if rec.host is not None:
+            # a promoted page still carries its cold home copy, and pages
+            # behind the write head are never mutated — dropping the device
+            # reference IS the demotion (no redundant D2H / store rewrite)
+            rec.dev = None
+            rec.state = _COLD
+            return
+        self.engine.submit_writeback(self._wb_seq, rec.dev)
+        self._wb_seq += 1
+        self._pending_demotions.append((table, p))
+        rec.dev = None
+        rec.state = _WB
+
+    def flush_demotions(self, stats: StreamStats) -> None:
+        """Drain pending page writebacks (pipelined D2H, in submit order)
+        and re-home them at the cold kind."""
+        if not self._pending_demotions:
+            return
+        pending, self._pending_demotions = self._pending_demotions, []
+        t0 = time.perf_counter()
+        hosts = self.engine.drain_writebacks()
+        stats.writeback_drain_s += time.perf_counter() - t0
+        for (table, p), host in zip(pending, hosts):
+            nb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(host))
+            stats.n_transfers += 1
+            stats.d2h_requests += len(jax.tree.leaves(host))
+            stats.bytes_d2h += nb
+            if self.kind == mk.DISK_HOST:
+                key = self._page_key(table.rid, p)
+                self.store.put(key, host)
+                host = self.store.get(key)
+            rec = table.records[p]
+            rec.host = host
+            rec.state = _COLD
+            self.demoted_groups += 1
+
+    def cold_keys(self) -> "OrderedDict[tuple, Pytree]":
+        """Every cold page of every active request, slot-major then page
+        order (the stream's submission = consumption order)."""
+        out: "OrderedDict[tuple, Pytree]" = OrderedDict()
+        for slot in sorted(self._by_slot):
+            table = self._by_slot[slot]
+            for p, rec in enumerate(table.records):
+                if rec.state == _COLD:
+                    out[(table.rid, p)] = rec.host
+        return out
+
+    def prefetch(self) -> None:
+        """Speculatively push the current cold set (deduped; stale keys
+        from retired/evicted requests are dropped)."""
+        cold = self.cold_keys()
+        self.stream.sync(set(cold))
+        for key, tree in cold.items():
+            self.stream.push(key, tree)
+
+    def view(self, stats: StreamStats) -> tuple:
+        """This step's per-slot page view: hot pages by reference, cold
+        pages popped from the stream, future pages the shared zero page."""
+        view = []
+        for slot in range(self.slots):
+            table = self._by_slot.get(slot)
+            if table is None:
+                view.append((self._zero_page,) * self.n_pages)
+                continue
+            pages = []
+            for p, rec in enumerate(table.records):
+                if rec.state == _DEVICE:
+                    pages.append(rec.dev)
+                elif rec.state == _ZERO:
+                    pages.append(self._zero_page)
+                else:
+                    if rec.state == _WB:
+                        # demoted but never flushed — should not happen in
+                        # the serve loop; flush so the host bytes exist
+                        self.flush_demotions(stats)
+                    dev = self.stream.pop((table.rid, p), rec.host, stats)
+                    if self.kind == mk.DEVICE or p >= self._hot_floor(table):
+                        # home tier is the device (or the page re-entered
+                        # the hot window after a readmit): promote
+                        rec.dev = dev
+                        rec.state = _DEVICE
+                    pages.append(dev)
+            view.append(tuple(pages))
+        # one controller observation per request per step (see PageStream)
+        self.stream.step_done()
+        return tuple(view)
+
+    def update_current(self, new_cache: Pytree) -> None:
+        """Re-slice each active slot's current page out of the decode
+        output (the only page the step wrote)."""
+        for slot, table in self._by_slot.items():
+            p = self.current_page(table)
+            rec = table.records[p]
+            rec.dev = self._extract(
+                new_cache,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(p * self.config.page_len, jnp.int32),
+            )
+            rec.host = None
+            rec.state = _DEVICE
+        self.peak_resident_bytes = max(
+            self.peak_resident_bytes, self.device_resident_bytes()
+        )
+
+    def advance(self, table: PageTable) -> None:
+        """Call after ``table.pos`` advanced: demote pages that fell out of
+        the hot window (no-op for the device home kind)."""
+        if self.kind == mk.DEVICE:
+            return
+        for p in range(self._hot_floor(table)):
+            if table.records[p].state == _DEVICE:
+                self._demote(table, p)
+
+    # -- continuous batching -------------------------------------------------
+    def evict(self, rid: int, stats: StreamStats) -> None:
+        """Park every device page at the host (spill store for disk homes)
+        and free the request's batch slot; the table survives for
+        ``readmit``."""
+        table = self.tables[rid]
+        for p, rec in enumerate(table.records):
+            if rec.state == _DEVICE:
+                self._demote(table, p)
+        self.flush_demotions(stats)
+        if table.slot is not None:
+            self._by_slot.pop(table.slot, None)
+        table.slot = None
+        self.prefetch()  # drop the evicted request's in-flight keys
+
+    def readmit(self, rid: int, slot: int) -> PageTable:
+        """Resume an evicted request in a (free) batch slot; its pages are
+        cold and stream back in over the following steps."""
+        if slot in self._by_slot:
+            raise ValueError(f"slot {slot} is occupied")
+        table = self.tables[rid]
+        if table.slot is not None:
+            raise ValueError(f"request {rid} is not evicted")
+        table.slot = slot
+        self._by_slot[slot] = table
+        return table
+
+    def retire(self, rid: int, stats: StreamStats) -> None:
+        """Drop a finished request: device pages freed, spill chunks
+        deleted, slot released."""
+        # in-flight demotions must land before their records are dropped
+        # (flush zips pending entries with drained tickets in order —
+        # e.g. a gen==1 request retires straight from admission, with its
+        # admission demotions still pending)
+        self.flush_demotions(stats)
+        table = self.tables.pop(rid)
+        if table.slot is not None:
+            self._by_slot.pop(table.slot, None)
+        if self.kind == mk.DISK_HOST and self.store is not None:
+            for p in range(self.n_pages):
+                key = self._page_key(rid, p)
+                if key in self.store:
+                    self.store.delete(key)
+        table.records = []
+        self.stream.forget(rid)
+        self.prefetch()
+
+    # -- accounting ----------------------------------------------------------
+    def device_resident_bytes(self) -> int:
+        """Bytes of cache the device *retains* between steps (hot pages +
+        promoted pages + the shared zero page) — the working-set bound the
+        hierarchy buys."""
+        n_dev = sum(
+            1
+            for t in self.tables.values()
+            for r in t.records
+            if r.state == _DEVICE
+        )
+        return (n_dev + 1) * self.page_nbytes  # +1: the shared zero page
+
+    def total_cache_bytes(self) -> int:
+        """Bytes of the full dense cache across all slots (what an unpaged
+        device-resident run retains)."""
+        return self.slots * self.n_pages * self.page_nbytes

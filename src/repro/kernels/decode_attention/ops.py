@@ -52,3 +52,41 @@ def decode_attention(
         qg, kg, vg, lens, spec=spec, block_kv=bkv, interpret=interpret
     )
     return out.reshape(b, kh, g, h).reshape(b, n, h)
+
+
+def decode_attention_paged(
+    q: jax.Array,  # (B, N, H)
+    k_pages,  # sequence of (B, Tp, KH, H) device-resident pages
+    v_pages,  # sequence of (B, Tp, KH, H)
+    lengths: jax.Array,  # (B,) int32 — valid prefix per sequence
+    *,
+    spec: PrefetchSpec = _DEFAULT_SPEC,
+    block_kv: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash-decode over a paged KV-cache view, by reference.
+
+    The kernel-level counterpart of the serving pager's
+    :func:`repro.core.kvpager.assemble_view`: the TPU decode path for a
+    page-granular cache (this container's CPU serving session instead
+    assembles the dense view and decodes through the XLA attention —
+    see ``train.steps.make_paged_decode_step``).  ``k_pages`` /
+    ``v_pages`` are the per-page device tensors.  They are joined at trace
+    time (pure concatenation, no host copies); the kernel's DMA grid then
+    streams ``block_kv``-row slabs out of HBM exactly as for a contiguous
+    cache.  ``block_kv`` defaults to the page length, floored at the
+    TPU lane width (128) — so each DMA covers one page when pages are
+    >= 128 tokens, and a whole number of pages per slab otherwise.
+    Values are bitwise-identical to :func:`decode_attention` on the dense
+    cache (property-tested).
+    """
+    k_pages, v_pages = tuple(k_pages), tuple(v_pages)
+    if not k_pages or len(k_pages) != len(v_pages):
+        raise ValueError("k_pages / v_pages must be equal-length, non-empty")
+    if block_kv is None:
+        block_kv = max(k_pages[0].shape[1], 128)
+    k = jnp.concatenate(k_pages, axis=1)
+    v = jnp.concatenate(v_pages, axis=1)
+    return decode_attention(
+        q, k, v, lengths, spec=spec, block_kv=block_kv, interpret=interpret
+    )

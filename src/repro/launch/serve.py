@@ -1,27 +1,509 @@
-"""Batched serving driver: prefill + decode loop with placement policies.
+"""Paged hierarchical KV-cache serving: continuous batching over memory kinds.
 
-Demonstrates the paper's memory kinds on the serving path: the KV cache can
-be placed at ``Device`` (HBM) or ``PinnedHost`` level via ``--kv-kind``, and
-host-resident caches are streamed per decode step (pass-by-reference: the
-compiled step reads the device-resident view, the driver moves data).
+The serving counterpart of the streamed optimizer: each request's KV cache
+is split into fixed-size page groups (``repro.core.kvpager``) and only the
+hot attention window stays device-resident.  Cold pages live at the kind
+named by ``--kv-kind`` (``device`` | ``pinned_host`` | ``disk_host``) and
+are fetched ahead of the decode step by the
+:class:`~repro.core.engine.TransferEngine` — coalesced (one H2D request per
+page group), prefetched under a per-request adaptive window
+(``distance="auto"``), written back through the pipelined D2H drain when
+they fall out of the hot window.  The decode step consumes the assembled
+page view **by reference** — the same executable as the unpaged step, so
+where the cache lives never changes what is decoded (bitwise).
+
+:class:`ServeSession` is the engine room: a request queue with continuous
+batching — requests are admitted into free batch slots and evicted/retired
+between decode steps, each with its own prompt length (pad-free: prefill is
+per-request) and its own page table.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \\
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 --kv-kind pinned_host --kv-page-len 16
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from collections import deque
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core import memkind as mk
+from repro.core.engine import TransferEngine
+from repro.core.hoststream import StreamStats
+from repro.core.kvpager import KVPager, KVPagerConfig, paged_cache_supported
+from repro.core.refspec import AUTO
+from repro.core.spillstore import SpillStore
 from repro.launch.mesh import make_local_mesh
-from repro.models import transformer
 from repro.parallel import sharding as sh
 from repro.train import steps as st
+
+KV_KINDS = ("device", "pinned_host", "disk_host")
+
+
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def _prompt_batch(cfg, tokens) -> dict:
+    """(B, S) prompt ids -> the model's batch dict (codebook archs replicate
+    the ids over codebooks, as the seed serve loop did)."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    if cfg.n_codebooks:
+        b, s = tokens.shape
+        return {
+            "codes": jnp.broadcast_to(tokens[:, None], (b, cfg.n_codebooks, s))
+        }
+    return {"tokens": tokens}
+
+
+def _step_batch(cfg, tok: np.ndarray) -> dict:
+    """Per-slot next tokens — (B,) or (B, n_codebooks) — to a one-token
+    decode batch dict."""
+    if cfg.n_codebooks:
+        return {"codes": jnp.asarray(tok).reshape(-1, cfg.n_codebooks, 1)}
+    return {"tokens": jnp.asarray(tok).reshape(-1, 1)}
+
+
+def _emit(cfg, tok) -> int:
+    """The emitted stream token (codebook archs report codebook 0)."""
+    return int(tok[0]) if cfg.n_codebooks else int(tok)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: prompt in, ``gen`` greedy tokens out."""
+
+    rid: int
+    prompt: np.ndarray  # (s,) int32
+    gen: int
+    #: last sampled token — scalar, or (n_codebooks,) for audio archs —
+    #: the next decode step's input
+    next_token: Optional[np.ndarray] = None
+    emitted: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.emitted) >= self.gen
+
+
+class ServeSession:
+    """Continuous-batching decode loop over a paged hierarchical KV cache.
+
+    ``slots`` batch lanes decode in lock-step (one jitted step, per-slot
+    positions); requests flow through them: ``submit`` queues work,
+    admissions fill free slots between steps (per-request prefill — no
+    cross-request prompt padding), finished requests retire and their slot
+    is immediately reused.  ``evict``/``readmit`` park a request's pages at
+    the host mid-decode and resume it later — decoding continues
+    bitwise-identically because pages are reconstructed exactly.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        mesh,
+        *,
+        slots: int,
+        max_len: int,
+        kv_kind: str = "device",
+        page_len: int = 32,
+        hot_pages: int = 1,
+        distance=AUTO,
+        seed: int = 0,
+        engine: Optional[TransferEngine] = None,
+        spill_dir: Optional[str] = None,
+        stats: Optional[StreamStats] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.mesh = mesh
+        self.slots = slots
+        self.stats = stats if stats is not None else StreamStats()
+        self.stats.mode = "paged"
+        self._kind = mk.as_kind(kv_kind)
+        # validate — and do every fallible init — before allocating the
+        # engine thread / spill dir: a failed constructor must not leak
+        # resources (KVPagerConfig validates its knobs in __post_init__)
+        pager_cfg = KVPagerConfig(
+            page_len=page_len,
+            hot_pages=hot_pages,
+            kind=self._kind,
+            distance=distance,
+        )
+        self.max_len = _round_up(max_len, page_len)
+        template = st.abstract_caches(cfg, 1, self.max_len)
+        if not paged_cache_supported(template):
+            raise ValueError(
+                f"{cfg.name}: cache tree is not pageable (ring/recurrent "
+                "state) — use the unpaged serve path (kv_page_len=0)"
+            )
+        self.plan = sh.make_plan(mesh, mode="serve")
+        key = jax.random.PRNGKey(seed)
+        self.params = st.init_train_state(key, cfg)[0]
+        self.sharder = sh.make_sharder(self.plan, self.params, slots)
+
+        self._engine = engine or TransferEngine()
+        self._owns_engine = engine is None
+        self._store = None
+        if self._kind == mk.DISK_HOST:
+            ephemeral = spill_dir is None
+            if ephemeral:
+                import tempfile
+
+                spill_dir = tempfile.mkdtemp(prefix="repro-serve-kv-")
+            self._store = SpillStore(spill_dir, ephemeral=ephemeral)
+
+        self.pager = KVPager(
+            template,
+            pager_cfg,
+            slots=slots,
+            engine=self._engine,
+            store=self._store,
+        )
+        self._prefill = jax.jit(
+            st.make_prefill_step(cfg, 1, self.max_len, mesh, self.sharder)
+        )
+        self._step = st.make_paged_decode_step(cfg, mesh, self.sharder)
+        self._argmax = jax.jit(
+            lambda logits: jnp.argmax(logits[..., -1, :], axis=-1).astype(jnp.int32)
+        )
+
+        self.requests: dict[int, Request] = {}
+        self.queue: "deque[int]" = deque()
+        self._slot_of: dict[int, int] = {}  # rid -> slot
+        self._next_rid = 0
+        self.n_steps = 0
+        #: per-step compute-blocked transfer wait (steady-state metric)
+        self.step_waits: list = []
+
+    def _tok_shape(self) -> tuple:
+        cb = self.cfg.n_codebooks
+        return (self.slots, cb) if cb else (self.slots,)
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, prompt, gen: int) -> int:
+        """Queue a request; returns its id.  Admitted at the next step (or
+        immediately via :meth:`admit_pending`)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + gen > self.max_len:
+            raise ValueError(
+                f"prompt {len(prompt)} + gen {gen} exceeds max_len {self.max_len}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = Request(rid=rid, prompt=prompt, gen=gen)
+        self.queue.append(rid)
+        return rid
+
+    def _free_slots(self) -> list:
+        return [s for s in range(self.slots) if s not in self.pager._by_slot]
+
+    def admit_pending(self) -> dict:
+        """Prefill queued requests into free slots.  Returns ``{rid:
+        first_token}`` (the prompt's greedy continuation — emitted at
+        admission, before any decode step)."""
+        emitted = {}
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            rid = self.queue.popleft()
+            req = self.requests[rid]
+            logits, cache = self._prefill(
+                self.params, _prompt_batch(self.cfg, req.prompt[None, :])
+            )
+            tok = np.asarray(self._argmax(logits))[0]  # scalar / (n_codebooks,)
+            req.next_token = tok
+            req.emitted.append(_emit(self.cfg, tok))
+            emitted[rid] = req.emitted[-1]
+            self._slot_of[rid] = slot
+            self.pager.admit(rid, slot, cache, len(req.prompt))
+            if req.done:  # gen == 1: nothing left to decode
+                self._retire(rid)
+        self.pager.flush_demotions(self.stats)
+        self.pager.prefetch()
+        return emitted
+
+    def _retire(self, rid: int) -> None:
+        self._slot_of.pop(rid, None)
+        self.pager.retire(rid, self.stats)
+
+    def evict(self, rid: int) -> None:
+        """Park a mid-decode request at the host and free its slot."""
+        self.pager.evict(rid, self.stats)
+        self._slot_of.pop(rid, None)
+
+    def readmit(self, rid: int) -> None:
+        """Resume an evicted request in a free slot (pages stream back in
+        cold over the following steps)."""
+        free = self._free_slots()
+        if not free:
+            raise RuntimeError("no free slot to readmit into")
+        slot = free[0]
+        self.pager.readmit(rid, slot)
+        self._slot_of[rid] = slot
+
+    @property
+    def active(self) -> dict:
+        """rid -> slot of requests currently decoding."""
+        return dict(self._slot_of)
+
+    def pending_work(self) -> bool:
+        return bool(self.queue or self._slot_of)
+
+    # -- the decode loop -----------------------------------------------------
+    def warmup(self) -> None:
+        """Compile every per-step executable against a throwaway all-zero
+        view (no table/stream state is touched), so the first timed step
+        does not pay compile time (cf. ``benchmarks/common.timed``)."""
+        view = tuple(
+            (self.pager._zero_page,) * self.pager.n_pages for _ in range(self.slots)
+        )
+        tokens = np.zeros(self._tok_shape(), np.int32)
+        pos = jnp.zeros((self.slots,), jnp.int32)
+        logits, nc = self._step(
+            self.params, view, _step_batch(self.cfg, tokens), pos
+        )
+        self._argmax(logits)
+        out = self.pager._extract(
+            nc, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)
+        )
+        jax.block_until_ready(out)
+
+    def step(self) -> dict:
+        """One decode step over every active slot.  Returns ``{rid: token}``
+        for tokens emitted this step (including first tokens of requests
+        admitted at the end of the step)."""
+        if not self._slot_of and (self.queue):
+            return self.admit_pending()
+        wait0 = self.stats.transfer_wait_s
+
+        tokens = np.zeros(self._tok_shape(), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        by_slot = {}
+        for rid, slot in self._slot_of.items():
+            req = self.requests[rid]
+            tokens[slot] = req.next_token
+            pos[slot] = self.pager.tables[rid].pos
+            by_slot[slot] = req
+
+        # pop this step's cold pages (waits only where the window fell
+        # short), then speculatively prefetch the same cold set for the
+        # next step — those transfers overlap the decode compute below
+        view = self.pager.view(self.stats)
+        self.pager.prefetch()
+        logits, new_cache = self._step(
+            self.params, view, _step_batch(self.cfg, tokens), jnp.asarray(pos)
+        )
+        nxt = np.asarray(self._argmax(logits))  # blocks on the decode compute
+        self.pager.update_current(new_cache)
+
+        emitted = {}
+        for slot, req in by_slot.items():
+            req.next_token = nxt[slot]
+            req.emitted.append(_emit(self.cfg, nxt[slot]))
+            emitted[req.rid] = req.emitted[-1]
+            table = self.pager.tables[req.rid]
+            table.pos += 1
+            self.pager.advance(table)
+        self.pager.flush_demotions(self.stats)
+        for req in list(by_slot.values()):
+            if req.done:
+                self._retire(req.rid)
+        self.n_steps += 1
+        self.step_waits.append(self.stats.transfer_wait_s - wait0)
+        emitted.update(self.admit_pending())
+        return emitted
+
+    def run(self) -> dict:
+        """Drive steps until every submitted request has finished.  Returns
+        ``{rid: np.ndarray of emitted tokens}``."""
+        self.admit_pending()
+        while self.pending_work():
+            self.step()
+        return {
+            rid: np.asarray(req.emitted, np.int32)
+            for rid, req in self.requests.items()
+        }
+
+    def close(self) -> None:
+        if self._owns_engine:
+            self._engine.close()
+        if self._store is not None:
+            self._store.close()
+
+    def __enter__(self) -> "ServeSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# unpaged reference path (per-step whole-cache placement)
+# ---------------------------------------------------------------------------
+
+
+def _serve_unpaged(
+    cfg,
+    mesh,
+    *,
+    batch: int,
+    prompt_len: int,
+    gen: int,
+    kv_kind: str,
+    seed: int,
+    engine: Optional[TransferEngine],
+    warmup: bool,
+    stats: StreamStats,
+):
+    """The pre-pager schedule, kept as the A/B baseline: host-resident
+    caches round-trip through host memory synchronously on every decode
+    step.  Fixed (debugged) version: placement uses the sharding plan's
+    cache specs (a bare ``PartitionSpec()`` silently dropped the plan under
+    model parallelism), and the cache is only donated when it is
+    device-resident (donating a cache the host branch then re-places trips
+    deleted-buffer errors).
+
+    Pageable (full-attention) caches prefill per request and decode with
+    per-slot positions — the same executables as the paged session, so the
+    two paths are bitwise-comparable.  Ring/recurrent caches (``slot_pos``
+    is shared across the batch) keep the seed's lock-step schedule: one
+    batched prefill, one scalar position.
+    """
+    plan = sh.make_plan(mesh, mode="serve")
+    key = jax.random.PRNGKey(seed)
+    params = st.init_train_state(key, cfg)[0]
+    sharder = sh.make_sharder(plan, params, batch)
+    kind = mk.as_kind(kv_kind)
+    if kind == mk.DISK_HOST:
+        raise ValueError("the unpaged path has no disk home; use --kv-page-len > 0")
+    device_resident = kind.jax_kind == "device"
+
+    max_len = prompt_len + gen
+    vector_pos = paged_cache_supported(st.abstract_caches(cfg, 1, max_len))
+    # donation is only safe when the cache stays on device: the host branch
+    # re-reads the pre-step tree to place it (satellite bugfix)
+    decode_fn = jax.jit(
+        st.make_decode_step(cfg, mesh, sharder),
+        donate_argnums=(1,) if device_resident else (),
+    )
+    argmax_fn = jax.jit(
+        lambda logits: jnp.argmax(logits[..., -1, :], axis=-1).astype(jnp.int32)
+    )
+
+    key_t = jax.random.PRNGKey(seed + 1)
+    prompts = np.asarray(
+        jax.random.randint(key_t, (batch, prompt_len), 1, cfg.vocab_size), np.int32
+    )
+
+    t0 = time.perf_counter()
+    if vector_pos:
+        prefill_fn = jax.jit(st.make_prefill_step(cfg, 1, max_len, mesh, sharder))
+        stack_fn = jax.jit(
+            lambda slots: jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=xs[0].ndim - 4), *slots
+            )
+        )
+        slot_caches, first = [], []
+        for b in range(batch):
+            logits, cache = prefill_fn(params, _prompt_batch(cfg, prompts[b][None]))
+            first.append(np.asarray(argmax_fn(logits))[0])
+            slot_caches.append(cache)
+        caches = stack_fn(tuple(slot_caches))
+        tokens = np.stack(first)
+    else:
+        # ring/recurrent decode state: batched lock-step prefill (per-slot
+        # positions cannot address a shared ring)
+        prefill_fn = jax.jit(
+            st.make_prefill_step(cfg, batch, max_len, mesh, sharder)
+        )
+        logits, caches = prefill_fn(params, _prompt_batch(cfg, prompts))
+        tokens = np.asarray(argmax_fn(logits))
+    jax.block_until_ready(caches)
+    t_prefill = time.perf_counter() - t0
+
+    # the sharding plan's cache placement (satellite bugfix: was a bare
+    # replicated PartitionSpec that dropped the plan under --model-parallel)
+    specs = sh.cache_specs_tree(plan, caches, batch)
+    cache_leaves = len(jax.tree.leaves(caches))
+    cache_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+
+    def round_trip(c):
+        t0 = time.perf_counter()
+        c = mk.place(c, mesh, specs, kind)
+        jax.block_until_ready(c)
+        if engine is not None:
+            engine.emulate_blocking_transfer(cache_leaves, cache_bytes)
+        c = mk.place(c, mesh, specs, mk.DEVICE)
+        jax.block_until_ready(c)
+        if engine is not None:
+            engine.emulate_blocking_transfer(cache_leaves, cache_bytes)
+        w = time.perf_counter() - t0
+        stats.n_transfers += 2
+        stats.n_groups += 1
+        stats.h2d_requests += cache_leaves
+        stats.d2h_requests += cache_leaves
+        stats.bytes_h2d += cache_bytes
+        stats.bytes_d2h += cache_bytes
+        stats.transfer_wait_s += w
+        stats.wait_per_group.append(w)
+        return c
+
+    def emitted_of(tok_b):
+        return tok_b[:, 0] if cfg.n_codebooks else tok_b
+
+    out_tokens = [emitted_of(tokens)]
+
+    def step_pos(i: int):
+        if vector_pos:
+            return jnp.asarray(np.full((batch,), prompt_len + i, np.int32))
+        return jnp.asarray(prompt_len + i, jnp.int32)  # lock-step scalar
+
+    if warmup:
+        # compile the decode step against a throwaway copy so t_decode does
+        # not include compile time (satellite bugfix; cf. benchmarks.common)
+        caches_w = jax.tree.map(jnp.copy, caches)
+        jax.block_until_ready(
+            decode_fn(params, caches_w, _step_batch(cfg, tokens), step_pos(0))[0]
+        )
+
+    step_waits = []
+    t0 = time.perf_counter()
+    for i in range(gen - 1):
+        w0 = stats.transfer_wait_s
+        if not device_resident:
+            # the paper's Host kind, pre-pager: the ENTIRE cache
+            # round-trips through host memory synchronously every step
+            caches = round_trip(caches)
+        logits, caches = decode_fn(
+            params, caches, _step_batch(cfg, tokens), step_pos(i)
+        )
+        tokens = np.asarray(argmax_fn(logits))
+        out_tokens.append(emitted_of(tokens))
+        step_waits.append(stats.transfer_wait_s - w0)
+    t_decode = time.perf_counter() - t0
+
+    generated = np.stack(out_tokens, axis=1)
+    return {
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        # gen-1 decode steps: the first token per slot comes from prefill
+        "tokens_per_s": batch * (gen - 1) / t_decode if t_decode else float("inf"),
+        "generated": generated,
+        "step_waits": step_waits,
+        "stats": stats,
+        "paged": False,
+    }
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
 
 
 def serve(
@@ -32,82 +514,156 @@ def serve(
     prompt_len: int,
     gen: int,
     kv_kind: str = "device",
+    kv_page_len: int = 32,
+    hot_pages: int = 1,
+    distance=AUTO,
     seed: int = 0,
+    n_requests: Optional[int] = None,
+    engine: Optional[TransferEngine] = None,
+    spill_dir: Optional[str] = None,
+    warmup: bool = True,
 ):
-    plan = sh.make_plan(mesh, mode="serve")
-    key = jax.random.PRNGKey(seed)
-    params = st.init_train_state(key, cfg)[0]
-    sharder = sh.make_sharder(plan, params, batch)
+    """Serve ``n_requests`` greedy-decode requests (default: one per batch
+    slot) of ``prompt_len`` prompt tokens and ``gen`` generated tokens.
 
-    max_len = prompt_len + gen
-    prefill_fn = jax.jit(st.make_prefill_step(cfg, batch, max_len, mesh, sharder))
-    decode_fn = jax.jit(st.make_decode_step(cfg, mesh, sharder), donate_argnums=(1,))
+    ``kv_page_len > 0`` routes decode through the paged
+    :class:`ServeSession`; ``kv_page_len=0`` runs the unpaged reference
+    schedule (synchronous whole-cache placement per step for host kinds).
+    Returns timing, per-request generated tokens (``(n_requests, gen)``),
+    the :class:`StreamStats` row, and pager residency accounting.
+    """
+    stats = StreamStats()
+    n_requests = n_requests or batch
+    if kv_page_len <= 0:
+        if n_requests != batch:
+            raise ValueError("the unpaged path serves exactly one request per slot")
+        return _serve_unpaged(
+            cfg,
+            mesh,
+            batch=batch,
+            prompt_len=prompt_len,
+            gen=gen,
+            kv_kind=kv_kind,
+            seed=seed,
+            engine=engine,
+            warmup=warmup,
+            stats=stats,
+        )
 
-    kind = mk.as_kind(kv_kind)
-    tokens = jax.random.randint(key, (batch, prompt_len), 1, cfg.vocab_size)
-    if cfg.n_codebooks:
-        prompt = {"codes": jnp.broadcast_to(tokens[:, None], (batch, cfg.n_codebooks, prompt_len))}
-    else:
-        prompt = {"tokens": tokens}
-
-    t0 = time.perf_counter()
-    logits, caches = prefill_fn(params, prompt)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    out_tokens = []
-    t0 = time.perf_counter()
-    for i in range(gen):
-        nxt = jnp.argmax(logits[..., -1, :], axis=-1).astype(jnp.int32)
-        if cfg.n_codebooks:
-            step_batch = {"codes": nxt.reshape(batch, cfg.n_codebooks, 1)}
-            out_tokens.append(nxt[:, 0])
-        else:
-            nxt = nxt.reshape(batch, 1)
-            step_batch = {"tokens": nxt}
-            out_tokens.append(nxt[:, 0])
-        if kind.jax_kind != "device":
-            # paper's Host kind: cache round-trips through host memory —
-            # the decode step still sees a reference; the runtime moves data
-            caches = mk.place(caches, mesh, jax.sharding.PartitionSpec(), kind)
-            caches = mk.place(caches, mesh, jax.sharding.PartitionSpec(), mk.DEVICE)
-        logits, caches = decode_fn(params, caches, step_batch, jnp.asarray(prompt_len + i, jnp.int32))
-    jax.block_until_ready(logits)
-    t_decode = time.perf_counter() - t0
-    return {
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "tokens_per_s": batch * gen / t_decode if t_decode else float("inf"),
-        "generated": jnp.stack(out_tokens, axis=1),
-    }
+    key_t = jax.random.PRNGKey(seed + 1)
+    prompts = np.asarray(
+        jax.random.randint(key_t, (n_requests, prompt_len), 1, cfg.vocab_size),
+        np.int32,
+    )
+    with ServeSession(
+        cfg,
+        mesh,
+        slots=batch,
+        max_len=prompt_len + gen,
+        kv_kind=kv_kind,
+        page_len=kv_page_len,
+        hot_pages=hot_pages,
+        distance=distance,
+        seed=seed,
+        engine=engine,
+        spill_dir=spill_dir,
+        stats=stats,
+    ) as session:
+        rids = [session.submit(prompts[i], gen) for i in range(n_requests)]
+        if warmup:
+            session.warmup()
+        t0 = time.perf_counter()
+        admitted_first = session.admit_pending()
+        t_prefill = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        while session.pending_work():
+            session.step()
+        t_decode = time.perf_counter() - t0
+        generated = np.stack(
+            [np.asarray(session.requests[r].emitted, np.int32) for r in rids]
+        )
+        total_tokens = int(sum(len(session.requests[r].emitted) for r in rids))
+        # first tokens of the initial admissions were emitted during the
+        # prefill window, not the decode window — don't count them against
+        # t_decode
+        decode_tokens = total_tokens - len(admitted_first)
+        res = {
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "tokens_per_s": decode_tokens / t_decode if t_decode else float("inf"),
+            "generated": generated,
+            "step_waits": list(session.step_waits),
+            "stats": stats,
+            "paged": True,
+            "n_steps": session.n_steps,
+            "stale_drops": session.pager.stream.stale_drops,
+            "demoted_groups": session.pager.demoted_groups,
+            "peak_resident_bytes": session.pager.peak_resident_bytes,
+            "total_cache_bytes": session.pager.total_cache_bytes(),
+        }
+        return res
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--arch", choices=ARCHS, default="smollm-360m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--kv-kind", default="device", choices=["device", "pinned_host"])
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total requests to serve (default: one per slot)")
+    ap.add_argument("--kv-kind", default="device", choices=KV_KINDS)
+    ap.add_argument("--kv-page-len", type=int, default=32,
+                    help="tokens per KV page (0 = unpaged reference path)")
+    ap.add_argument("--hot-pages", type=int, default=1,
+                    help="full pages kept device-resident behind the write head")
+    ap.add_argument("--distance", default="auto",
+                    help="page prefetch window: an int or 'auto'")
+    ap.add_argument("--spill-dir", default=None,
+                    help="disk_host page store directory (default: ephemeral)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_local_mesh(model=args.model_parallel)
+    distance = args.distance if args.distance == AUTO else int(args.distance)
     res = serve(
         cfg,
         mesh,
         batch=args.batch,
         prompt_len=args.prompt_len,
         gen=args.gen,
+        n_requests=args.requests,
         kv_kind=args.kv_kind,
+        kv_page_len=args.kv_page_len,
+        hot_pages=args.hot_pages,
+        distance=distance,
+        seed=args.seed,
+        spill_dir=args.spill_dir,
     )
+    stats = res["stats"]
     print(
         f"served {args.arch}: prefill {res['prefill_s']*1e3:.1f} ms, "
         f"decode {res['decode_s']*1e3:.1f} ms total, "
-        f"{res['tokens_per_s']:.1f} tok/s (kv_kind={args.kv_kind})"
+        f"{res['tokens_per_s']:.1f} tok/s "
+        f"(kv_kind={args.kv_kind}, page_len={args.kv_page_len}, "
+        f"paged={res['paged']})"
     )
+    print(
+        f"transfers: h2d {stats.h2d_requests} req / {stats.bytes_h2d} B, "
+        f"d2h {stats.d2h_requests} req / {stats.bytes_d2h} B, "
+        f"disk {stats.disk_requests} req, "
+        f"compute wait {stats.transfer_wait_s*1e3:.2f} ms"
+    )
+    if res["paged"]:
+        print(
+            f"residency: peak {res['peak_resident_bytes']} B device-resident "
+            f"of {res['total_cache_bytes']} B total cache "
+            f"({res['demoted_groups']} demotions, "
+            f"{res['stale_drops']} stale prefetches)"
+        )
     return 0
 
 

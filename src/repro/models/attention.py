@@ -254,9 +254,15 @@ def attention_decode(
     x: jax.Array,  # (B, 1, D)
     angles: Optional[jax.Array],  # (B, 1, H/2) for this position
     cache: Params,
-    pos: jax.Array,  # scalar int32 — next position to write
+    pos: jax.Array,  # scalar int32 — next position to write; or (B,) per-slot
 ) -> tuple[jax.Array, Params]:
-    """One decode step with KV-cache append (ring for windowed archs)."""
+    """One decode step with KV-cache append (ring for windowed archs).
+
+    ``pos`` may be a per-batch-slot vector (the serving path's continuous
+    batching: every slot decodes its own context position).  Vector ``pos``
+    requires a full-attention cache (no ring ``slot_pos``, which is shared
+    across the batch); the scalar path is unchanged.
+    """
     from repro.models import rope as _rope
 
     q, k, v = _project_qkv(cfg, p, x)
@@ -265,6 +271,22 @@ def attention_decode(
         k = _rope.apply_rope(k, angles)
 
     cache_len = cache["k"].shape[1]
+    if jnp.ndim(pos) == 1:
+        if "slot_pos" in cache:
+            raise NotImplementedError(
+                "per-slot decode positions require a full-attention cache "
+                "(ring slot_pos is shared across the batch)"
+            )
+        rows = jnp.arange(cache["k"].shape[0])
+        new_k = cache["k"].at[rows, pos].set(k[:, 0].astype(cache["k"].dtype))
+        new_v = cache["v"].at[rows, pos].set(v[:, 0].astype(cache["v"].dtype))
+        mask = jnp.arange(cache_len)[None, :] <= pos[:, None]  # (B, T)
+        new_cache = {"k": new_k, "v": new_v}
+        out = _gqa_attend(
+            cfg, q, new_k.astype(q.dtype), new_v.astype(q.dtype), mask[:, None, :]
+        )
+        out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+        return out, new_cache
     if "slot_pos" in cache:
         slot = jnp.mod(pos, cache_len)
         new_k = jax.lax.dynamic_update_slice_in_dim(

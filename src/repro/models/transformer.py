@@ -247,14 +247,21 @@ def _embed(cfg: ModelConfig, params: Params, batch: dict, pos=None) -> jax.Array
         x = jnp.concatenate([vis, x], axis=1)  # vision prefix + text
     if cfg.pos_type == "sinusoidal":
         s = x.shape[1]
-        # decode passes the absolute position of its single token (a scalar);
-        # train/prefill start at 0
-        positions = (
-            jnp.arange(s)
-            if pos is None
-            else jnp.asarray(pos, jnp.int32)[None] + jnp.arange(s) - (s - 1)
-        )
-        x = x + rope.sinusoidal_embedding(positions, cfg.d_model)[None].astype(dt)
+        # decode passes the absolute position of its single token (a scalar,
+        # or a (B,) per-slot vector on the serving path); train/prefill
+        # start at 0
+        if pos is None:
+            positions = jnp.arange(s)
+        elif jnp.ndim(pos) == 1:
+            positions = (
+                jnp.asarray(pos, jnp.int32)[:, None] + jnp.arange(s)[None, :] - (s - 1)
+            )
+        else:
+            positions = jnp.asarray(pos, jnp.int32)[None] + jnp.arange(s) - (s - 1)
+        emb = rope.sinusoidal_embedding(positions, cfg.d_model)
+        if emb.ndim == 2:
+            emb = emb[None]
+        x = x + emb.astype(dt)
     if getattr(cfg, "scale_embeddings", False):
         x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
     return x
@@ -263,7 +270,9 @@ def _embed(cfg: ModelConfig, params: Params, batch: dict, pos=None) -> jax.Array
 def _angles(cfg: ModelConfig, batch: dict, seq_len: int, pos=None):
     """RoPE angles for the whole sequence (train/prefill) or one step."""
     if cfg.pos_type == "rope":
-        if pos is not None:
+        if pos is not None and jnp.ndim(pos) == 1:
+            positions = jnp.asarray(pos)[:, None]  # (B,1) per-slot positions
+        elif pos is not None:
             positions = jnp.asarray(pos)[None, None]  # (1,1)
         else:
             positions = jnp.arange(seq_len)[None]
@@ -450,7 +459,9 @@ def decode_step(
     cfg: ModelConfig, params: Params, batch: dict, caches: Params, pos: jax.Array, sharder=None
 ) -> tuple[jax.Array, Params]:
     """One decode step.  batch carries the new token(s); ``pos`` is the
-    absolute position being written (scalar int32).  Returns (logits, caches)."""
+    absolute position being written (scalar int32, or a (B,) vector of
+    per-slot positions — the serving path's continuous batching).  Returns
+    (logits, caches)."""
     x = _embed(cfg, params, batch, pos=pos)
     angles = _angles(cfg, batch, 1, pos=pos)
     if cfg.pos_type == "mrope":

@@ -330,6 +330,38 @@ def make_decode_step(
     return decode_step
 
 
+def make_paged_decode_step(
+    cfg: ModelConfig, mesh=None, sharder=None, *, donate_cache: bool = True
+) -> Callable[[Pytree, Any, Pytree, jax.Array], tuple[jax.Array, Pytree]]:
+    """``(params, view, batch, pos) -> (logits, caches)`` over a paged KV
+    cache (see :mod:`repro.core.kvpager`).
+
+    ``view`` is the pager's per-slot tuple of page pytrees; ``pos`` is the
+    (B,) vector of per-slot context positions.  Assembly (pure page
+    concatenation) is a *separate* jit from the decode executable, so the
+    paged step runs the exact same decode program as
+    :func:`make_decode_step` on the exact same cache values — paged and
+    unpaged decode are bitwise-equal by construction.  The assembled dense
+    view is donated into the step (``donate_cache``): it is a per-step
+    transient, never the pager's retained hot pages (concatenation always
+    produces a fresh buffer).
+    """
+    from repro.core import kvpager
+
+    decode_fn = jax.jit(
+        make_decode_step(cfg, mesh, sharder),
+        donate_argnums=(1,) if donate_cache else (),
+    )
+    assemble = jax.jit(kvpager.assemble_view)
+
+    def paged_decode_step(params, view, batch, pos):
+        return decode_fn(params, assemble(view), batch, pos)
+
+    paged_decode_step.decode_fn = decode_fn  # type: ignore[attr-defined]
+    paged_decode_step.assemble = assemble  # type: ignore[attr-defined]
+    return paged_decode_step
+
+
 def init_train_state(
     key: jax.Array, cfg: ModelConfig
 ) -> tuple[Pytree, Pytree]:
