@@ -21,11 +21,12 @@ SUITES = {
     "engine": ("benchmarks.engine_compare", "coalesced transfer engine vs seed per-leaf schedule"),
     "disk": ("benchmarks.disk_tier", "DiskHost three-level streaming (modeled disk link)"),
     "serve": ("benchmarks.serve_paged", "paged KV-cache serving vs per-step placement"),
+    "shard": ("benchmarks.shard_stream", "sharding-aware coalescing vs per-leaf fallback (2-device mesh)"),
 }
 
 #: the suites driven purely by the deterministic LinkModel emulation —
 #: meaningful on a noisy CI runner, unlike the wall-clock studies
-SMOKE_SUITES = ["engine", "disk", "serve"]
+SMOKE_SUITES = ["engine", "disk", "serve", "shard"]
 
 
 def main() -> int:

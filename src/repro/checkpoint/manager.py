@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import time
@@ -35,6 +36,25 @@ import numpy as np
 Pytree = Any
 
 _SEP = "__"
+
+# 8+ digits: f"{step:08d}" pads but never truncates, so steps >= 10^8
+# produce wider names that must stay visible to restore/prune
+_STEP_RE = re.compile(r"step_(\d{8,})$")
+
+
+def _fsync_dir(path: Path) -> None:
+    """fsync a directory so a rename committed into it survives power loss
+    (best-effort: some filesystems refuse O_RDONLY dir fsync)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - exotic fs
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - exotic fs
+        pass
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree: Pytree) -> list[tuple[str, Any]]:
@@ -51,11 +71,39 @@ def _flatten(tree: Pytree) -> list[tuple[str, Any]]:
 
 class CheckpointManager:
     def __init__(self, directory: str | os.PathLike, *, keep: int = 3) -> None:
+        """``keep``: checkpoints retained after each commit.  ``keep=0``
+        explicitly means *keep all* (no pruning); negative values are
+        rejected rather than silently keeping everything.
+
+        Construction sweeps crash leftovers (partial ``.tmp`` dirs are
+        deleted, an orphaned ``.old`` is recovered as its step) so a
+        restart restores the right step BEFORE its first save.  The
+        manager therefore assumes a single writer per directory — the
+        driver's model; constructing a second manager against a directory
+        another process is actively checkpointing into may sweep that
+        writer's in-progress ``.tmp``."""
+        if keep < 0:
+            raise ValueError(f"keep must be >= 0 (0 = keep all), got {keep}")
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._sweep_stale()
+
+    def _sweep_stale(self) -> None:
+        """Remove leftovers of a crashed save: ``.tmp`` dirs are always
+        partial (pre-commit) and are deleted; a ``.old`` dir is the
+        previous copy of a step that was mid-overwrite — restore it when
+        the crash hit before the commit rename, drop it otherwise."""
+        for p in self.dir.glob("step_*.tmp"):
+            shutil.rmtree(p, ignore_errors=True)
+        for p in self.dir.glob("step_*.old"):
+            final = self.dir / p.name[: -len(".old")]
+            if final.exists():
+                shutil.rmtree(p, ignore_errors=True)
+            else:
+                p.rename(final)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Pytree, *, blocking: bool = False) -> None:
@@ -90,9 +138,24 @@ class CheckpointManager:
                     json.dump(meta, f)
                     f.flush()
                     os.fsync(f.fileno())
+                # overwrite without a crash window: the previous copy moves
+                # aside and is deleted only AFTER the rename commits — a
+                # crash between the two never loses the only copy of a step
+                old = None
                 if final.exists():
-                    shutil.rmtree(final)
-                tmp.rename(final)  # the atomic commit
+                    old = self.dir / f"step_{step:08d}.old"
+                    if old.exists():
+                        shutil.rmtree(old)
+                    final.rename(old)
+                try:
+                    tmp.rename(final)  # the atomic commit
+                except BaseException:
+                    if old is not None and not final.exists():
+                        old.rename(final)  # roll back: old copy stays latest
+                    raise
+                _fsync_dir(self.dir)  # the rename itself must be durable
+                if old is not None:
+                    shutil.rmtree(old, ignore_errors=True)
                 self._prune()
             except BaseException as e:  # noqa: BLE001 — surfaced via wait()
                 self._error = e
@@ -117,15 +180,16 @@ class CheckpointManager:
 
     def _prune(self) -> None:
         steps = self.all_steps()
+        # keep=0 means keep all (see __init__)
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
 
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list[int]:
         return sorted(
-            int(p.name.split("_")[1])
+            int(m.group(1))
             for p in self.dir.glob("step_*")
-            if p.is_dir() and not p.name.endswith(".tmp")
+            if p.is_dir() and (m := _STEP_RE.fullmatch(p.name))
         )
 
     def latest_step(self) -> Optional[int]:

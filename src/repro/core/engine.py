@@ -18,6 +18,20 @@ coalescing
     untouched (true pass-by-reference: data already at the fast tier is
     never re-sent).
 
+sharding-aware coalescing
+    Explicit multi-device layouts (``device_shardings``) compose with
+    coalescing instead of disabling it: a :class:`ShardedGroupLayout`
+    derives each leaf's per-device shard slices from its sharding's
+    ``addressable_devices_indices_map``, packs ONE staging buffer per
+    (addressable device, group), issues one ``device_put`` per device per
+    group, and assembles the committed leaves with
+    ``jax.make_array_from_single_device_arrays`` — bitwise identical to
+    eager sharded placement, at ``n_devices`` requests per group instead
+    of ``n_leaves x n_shards``.  This mirrors the source paper's (and
+    ePython's) host service, which feeds *per-core* channels: the host
+    process serves one request per device, never one per object per
+    device.
+
 buffer reuse
     Staging buffers are preallocated per group layout and recycled
     round-robin (the transfer worker completes a copy before reusing a
@@ -76,6 +90,7 @@ __all__ = [
     "PAPER_EPIPHANY_LINK",
     "EngineConfig",
     "GroupLayout",
+    "ShardedGroupLayout",
     "TransferFuture",
     "AdaptiveDistance",
     "TransferEngine",
@@ -268,6 +283,16 @@ def group_signature(group: Pytree) -> tuple:
     )
 
 
+def _aliases_host(flat: jax.Array, staging: np.ndarray) -> bool:
+    """True if the device array zero-copied the staging memory (some CPU
+    backends do) — in that case the buffer must NOT be recycled while the
+    array is alive."""
+    try:
+        return flat.unsafe_buffer_pointer() == staging.ctypes.data
+    except Exception:  # noqa: BLE001 — unknown backend: assume aliasing
+        return True
+
+
 class GroupLayout:
     """Pack/unpack plan for one group structure.
 
@@ -276,6 +301,9 @@ class GroupLayout:
     leaves pass through by reference.  ``unpack`` is a jitted
     slice+bitcast+reshape, compiled once per layout and bitwise-exact.
     """
+
+    #: default-placement layouts stage through a single device
+    n_devices = 1
 
     def __init__(self, group: Pytree, *, donate_flat: bool = True) -> None:
         leaves, self.treedef = jax.tree.flatten(group)
@@ -314,8 +342,24 @@ class GroupLayout:
         donate = (0,) if donate_flat else ()
         self._unpack = jax.jit(_unpack, donate_argnums=donate)
 
+    @property
+    def has_payload(self) -> bool:
+        return bool(self.metas)
+
+    @property
+    def n_requests(self) -> int:
+        """H2D requests this layout costs per group when coalesced."""
+        return 1 if self.metas else 0
+
     def new_staging(self) -> np.ndarray:
         return np.empty((self.staging_bytes,), np.uint8)
+
+    def put_staged(self, staging: np.ndarray):
+        """Issue the (single) H2D transfer of the packed staging buffer."""
+        return jax.device_put(staging)
+
+    def any_alias(self, flat, staging) -> bool:
+        return _aliases_host(flat, staging)
 
     def pack_into(self, leaves: list, staging: np.ndarray) -> np.ndarray:
         for i, off, shape, dtype, nbytes in self.metas:
@@ -357,6 +401,150 @@ def _bitcast(seg_u8: jax.Array, dtype: np.dtype) -> jax.Array:
     return lax.bitcast_convert_type(seg_u8.reshape(-1, jdt.itemsize), jdt)
 
 
+def _shard_shape(shape: tuple, idx: tuple) -> tuple:
+    """Shape of the shard a device holds, from its indices-map entry."""
+    if not idx:  # 0-d leaf: every device holds the scalar
+        return tuple(shape)
+    out = []
+    for dim, sl in zip(shape, idx):
+        start, stop, step = sl.indices(dim)
+        out.append(max(0, -(-(stop - start) // step)))
+    return tuple(out)
+
+
+def flatten_shardings(device_shardings: Any, n_leaves: int) -> list:
+    """Flatten a shardings pytree positionally against a group's leaf list.
+
+    ``None`` entries are kept as leaves (they mark default placement for
+    that position); a single sharding broadcasts over every leaf.
+    """
+    flat, _ = jax.tree.flatten(device_shardings, is_leaf=lambda x: x is None)
+    if len(flat) == 1 and n_leaves != 1:
+        flat = flat * n_leaves
+    if len(flat) != n_leaves:
+        raise ValueError(
+            f"device_shardings has {len(flat)} leaves for a group of "
+            f"{n_leaves} leaves"
+        )
+    return flat
+
+
+class ShardedGroupLayout:
+    """Per-(addressable device, group) pack/unpack plan for explicitly
+    sharded groups.
+
+    Each host leaf's per-device shard slices come from its sharding's
+    ``addressable_devices_indices_map``; every device gets ONE contiguous
+    staging buffer holding its shards at 64-byte-aligned offsets (a
+    replicated leaf contributes a full copy per device — exactly the bytes
+    eager sharded placement moves).  ``put_staged`` issues one
+    ``device_put`` per device per group; ``unpack`` runs a jitted
+    slice+bitcast+reshape on each device's flat buffer and assembles the
+    committed leaves with ``jax.make_array_from_single_device_arrays`` —
+    bitwise identical to ``jax.device_put(leaf, sharding)``.
+    """
+
+    def __init__(self, group: Pytree, shardings_flat: list, *, donate_flat: bool = True) -> None:
+        leaves, self.treedef = jax.tree.flatten(group)
+        self.n_leaves = len(leaves)
+        self.passthrough_idx: list[int] = []
+        #: per-leaf assembly plan: (leaf idx, global shape, dtype, sharding)
+        self.assembly: list[tuple] = []
+        entries: dict[Any, list] = {}
+        offs: dict[Any, int] = {}
+        default_dev = jax.devices()[0]
+        for i, (x, s) in enumerate(zip(leaves, shardings_flat)):
+            if isinstance(x, jax.Array):
+                self.passthrough_idx.append(i)
+                continue
+            a = np.asarray(x)
+            # pack at JAX's canonical dtype, same as GroupLayout (and as
+            # jax.device_put would canonicalize)
+            dtype = np.dtype(jax.dtypes.canonicalize_dtype(a.dtype))
+            if s is None:
+                # unplaced leaf riding in a sharded group: default device
+                s = jax.sharding.SingleDeviceSharding(default_dev)
+            imap = s.addressable_devices_indices_map(a.shape)
+            self.assembly.append((i, a.shape, dtype, s))
+            for d in sorted(imap, key=lambda d: d.id):
+                shard_shape = _shard_shape(a.shape, imap[d])
+                nbytes = int(np.prod(shard_shape, dtype=np.int64)) * dtype.itemsize
+                off = offs.get(d, 0)
+                entries.setdefault(d, []).append(
+                    (i, imap[d], off, shard_shape, dtype, nbytes)
+                )
+                offs[d] = _align(off + nbytes)
+        self.devices = sorted(entries, key=lambda d: d.id)
+        self.entries = [entries[d] for d in self.devices]
+        self.staging_bytes = [offs[d] for d in self.devices]
+        #: actual H2D payload (unpadded, summed over devices)
+        self.payload_bytes = sum(e[5] for es in self.entries for e in es)
+        #: ONE coalesced H2D request per (addressable device, group)
+        self.n_requests = len(self.devices)
+        self.n_devices = max(1, len(self.devices))
+        # one jitted unpack per distinct per-device plan (devices usually
+        # share one: identical shard shapes at identical offsets)
+        donate = (0,) if donate_flat else ()
+        by_plan: dict[tuple, Any] = {}
+        self._unpacks = []
+        for es in self.entries:
+            key = tuple((o, shape, str(dt), nb) for _i, _ix, o, shape, dt, nb in es)
+            fn = by_plan.get(key)
+            if fn is None:
+                metas = [(o, shape, dt, nb) for _i, _ix, o, shape, dt, nb in es]
+
+                def _unpack(flat, _metas=metas):
+                    outs = []
+                    for o, shape, dt, nb in _metas:
+                        seg = lax.slice(flat, (o,), (o + nb,))
+                        outs.append(_bitcast(seg, dt).reshape(shape))
+                    return tuple(outs)
+
+                fn = by_plan[key] = jax.jit(_unpack, donate_argnums=donate)
+            self._unpacks.append(fn)
+
+    @property
+    def has_payload(self) -> bool:
+        return bool(self.devices)
+
+    def new_staging(self) -> list[np.ndarray]:
+        return [np.empty((n,), np.uint8) for n in self.staging_bytes]
+
+    def pack_into(self, leaves: list, stagings: list[np.ndarray]) -> list[np.ndarray]:
+        for buf, es in zip(stagings, self.entries):
+            for i, idx, off, shape, dtype, nbytes in es:
+                dst = buf[off : off + nbytes].view(dtype).reshape(shape)
+                np.copyto(dst, np.asarray(leaves[i])[idx], casting="same_kind")
+        return stagings
+
+    def put_staged(self, stagings: list[np.ndarray]) -> list:
+        """One H2D transfer per device: the request-count collapse under a
+        mesh is ``n_devices`` per group, not ``n_leaves x n_shards``."""
+        return [jax.device_put(buf, d) for buf, d in zip(stagings, self.devices)]
+
+    def any_alias(self, flats: list, stagings: list) -> bool:
+        return any(_aliases_host(f, b) for f, b in zip(flats, stagings))
+
+    def unpack(self, flats: list, src_leaves: list) -> Pytree:
+        """Rebuild the group: per-device jitted unpack of each flat buffer,
+        then per-leaf assembly onto its sharding (committed multi-device
+        arrays, bitwise vs eager sharded placement)."""
+        shards: dict[int, list] = {}
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            for flat, es, fn in zip(flats or [], self.entries, self._unpacks):
+                for (i, *_), piece in zip(es, fn(flat)):
+                    shards.setdefault(i, []).append(piece)
+        out: list = [None] * self.n_leaves
+        for i, shape, dtype, s in self.assembly:
+            out[i] = jax.make_array_from_single_device_arrays(shape, s, shards[i])
+        for i in self.passthrough_idx:
+            out[i] = src_leaves[i]
+        return jax.tree.unflatten(self.treedef, out)
+
+
 # ---------------------------------------------------------------------------
 # futures
 # ---------------------------------------------------------------------------
@@ -371,6 +559,7 @@ class TransferFuture:
         "src_leaves",
         "n_requests",
         "nbytes",
+        "n_devices",
         "disk_requests",
         "disk_nbytes",
         "disk_wait_s",
@@ -388,6 +577,8 @@ class TransferFuture:
         self.src_leaves = src_leaves
         self.n_requests = n_requests
         self.nbytes = nbytes
+        #: addressable devices this group stages onto (1 for default placement)
+        self.n_devices = 1
         #: disk-tier accounting (zero for pure host/device groups)
         self.disk_requests = 0
         self.disk_nbytes = 0
@@ -571,18 +762,25 @@ class TransferEngine:
 
     # -- layout / staging ----------------------------------------------------
     def layout_for(self, group: Pytree) -> GroupLayout:
-        return self._layout_for_sig(group_signature(group), group)
+        return self._layout_for_sig(
+            group_signature(group),
+            lambda: GroupLayout(group, donate_flat=self.config.donate_flat),
+        )
 
-    def _layout_for_sig(self, sig: tuple, group: Pytree) -> GroupLayout:
+    def _layout_for_sig(self, sig: tuple, factory):
+        """Layout cache: one layout + staging pool per signature (shared by
+        the default-placement and sharded coalescing paths)."""
         lo = self._layouts.get(sig)
         if lo is None:
-            lo = GroupLayout(group, donate_flat=self.config.donate_flat)
+            lo = factory()
             self._layouts[sig] = lo
             self._staging_free[sig] = []
         return lo
 
-    def _acquire_staging(self, sig: tuple, layout: GroupLayout) -> np.ndarray:
-        """Check a staging buffer out of the layout's pool (worker thread).
+    def _acquire_staging(self, sig: tuple, layout) -> Any:
+        """Check a staging buffer (set) out of the layout's pool (worker
+        thread) — one ndarray for default-placement layouts, one ndarray
+        per addressable device for sharded layouts.
 
         Pops a recycled buffer when one is free, else allocates: the pool
         self-sizes to the worker's actual concurrency (1 buffer in the
@@ -594,20 +792,10 @@ class TransferEngine:
         self.staging_allocs += 1
         return layout.new_staging()
 
-    def _release_staging(self, sig: tuple, staging: np.ndarray) -> None:
+    def _release_staging(self, sig: tuple, staging: Any) -> None:
         free = self._staging_free[sig]
         if len(free) < max(1, self.config.staging_slots):
             free.append(staging)
-
-    @staticmethod
-    def _aliases_host(flat: jax.Array, staging: np.ndarray) -> bool:
-        """True if the device array zero-copied the staging memory (some CPU
-        backends do) — in that case the buffer must NOT be recycled while
-        the array is alive."""
-        try:
-            return flat.unsafe_buffer_pointer() == staging.ctypes.data
-        except Exception:  # noqa: BLE001 — unknown backend: assume aliasing
-            return True
 
     # -- disk stage pool (read-ahead window) --------------------------------
     def _disk_layout_for(self, dsig: tuple, disk_leaves: list) -> GroupLayout:
@@ -671,12 +859,39 @@ class TransferEngine:
                 self._disk_cond.notify_all()
 
     # -- submission (compute thread) ----------------------------------------
+    def _submit_disk_stage(self, sig: tuple, leaves: list, fut: TransferFuture):
+        """Enqueue the stage-1 disk fetch for a group's disk-tier leaves
+        (sharded and unsharded groups feed the disk worker identically);
+        returns the ticket, or None when nothing is disk-resident."""
+        from repro.core.spillstore import is_disk_leaf
+
+        disk_idx = [i for i, x in enumerate(leaves) if is_disk_leaf(x)]
+        if not disk_idx:
+            return None
+        disk_leaves = [leaves[i] for i in disk_idx]
+        # one chunk file = one disk request (the store's coalescing)
+        n_files = len({getattr(x, "filename", None) or id(x) for x in disk_leaves})
+        # group_signature cannot tell a memmap from an ndarray, so the disk
+        # layout must additionally key on *which* leaves are disk-resident
+        dsig = ("disk", sig, tuple(disk_idx))
+        dlayout = self._disk_layout_for(dsig, disk_leaves)
+        ticket = _DiskFetchTicket(dsig, disk_idx, n_files, dlayout.payload_bytes)
+        fut.disk_requests = n_files
+        fut.disk_nbytes = dlayout.payload_bytes
+        self._ensure_disk_worker()
+        self._disk_tasks.put((ticket, disk_leaves))
+        return ticket
+
     def submit_group(self, index: int, group: Pytree, *, device_shardings=None) -> TransferFuture:
         """Queue the H2D transfer of one group; returns immediately.
 
-        Coalescing requires default placement; with explicit
-        ``device_shardings`` (multi-device layouts) the engine falls back to
-        the per-leaf path, which honours them.
+        Coalescing composes with explicit ``device_shardings``
+        (multi-device layouts): the group stages through one buffer per
+        addressable device — ``n_devices`` requests per group — and the
+        committed leaves are assembled bitwise-equal to eager sharded
+        placement (see :class:`ShardedGroupLayout`).  Only
+        ``EngineConfig(coalesce=False)`` takes the per-leaf path, which
+        costs one request per (leaf, addressable shard).
 
         Groups containing disk-tier leaves (spill-store memmaps, see
         :mod:`repro.core.spillstore`) additionally enqueue a stage-1 fetch
@@ -686,43 +901,68 @@ class TransferEngine:
         from repro.core.spillstore import is_disk_leaf
 
         leaves = jax.tree.leaves(group)
-        coalesce = self.config.coalesce and device_shardings is None
-        sig = None
-        ticket = None
-        if coalesce:
-            sig = group_signature(group)
-            layout = self._layout_for_sig(sig, group)
-            n_req = 1 if layout.metas else 0
-            nbytes = layout.payload_bytes
-            fut = TransferFuture(index, layout, leaves, n_req, nbytes)
-            disk_idx = [i for i, x in enumerate(leaves) if is_disk_leaf(x)]
-            if disk_idx:
-                disk_leaves = [leaves[i] for i in disk_idx]
-                # one chunk file = one disk request (the store's coalescing)
-                n_files = len(
-                    {getattr(x, "filename", None) or id(x) for x in disk_leaves}
+        sh_flat = None
+        if device_shardings is not None:
+            sh_flat = flatten_shardings(device_shardings, len(leaves))
+        if self.config.coalesce:
+            if sh_flat is None:
+                sig = group_signature(group)
+                layout = self._layout_for_sig(
+                    sig,
+                    lambda: GroupLayout(group, donate_flat=self.config.donate_flat),
                 )
-                # group_signature cannot tell a memmap from an ndarray, so
-                # the disk layout must additionally key on *which* leaves
-                # are disk-resident
-                dsig = ("disk", sig, tuple(disk_idx))
-                dlayout = self._disk_layout_for(dsig, disk_leaves)
-                ticket = _DiskFetchTicket(
-                    dsig, disk_idx, n_files, dlayout.payload_bytes
+            else:
+                sig = ("sharded", group_signature(group), tuple(sh_flat))
+                layout = self._layout_for_sig(
+                    sig,
+                    lambda: ShardedGroupLayout(
+                        group, sh_flat, donate_flat=self.config.donate_flat
+                    ),
                 )
-                fut.disk_requests = n_files
-                fut.disk_nbytes = dlayout.payload_bytes
-                self._ensure_disk_worker()
-                self._disk_tasks.put((ticket, disk_leaves))
-        else:
-            n_host = sum(0 if isinstance(x, jax.Array) else 1 for x in leaves)
-            nbytes = sum(
-                0 if isinstance(x, jax.Array) else np.asarray(x).size * np.asarray(x).dtype.itemsize
-                for x in leaves
+            fut = TransferFuture(
+                index, layout, leaves, layout.n_requests, layout.payload_bytes
             )
-            fut = TransferFuture(index, None, leaves, n_host, nbytes)
+            fut.n_devices = layout.n_devices
+            ticket = self._submit_disk_stage(sig, leaves, fut)
+            self._ensure_worker()
+            self._tasks.put(("h2d", fut, group, None, True, sig, ticket))
+            return fut
+
+        # per-leaf fallback (A/B baseline): one request per (host leaf,
+        # addressable shard); disk-tier memmaps are read inline by
+        # device_put (no stage-1 pipeline) but their traffic is accounted
+        n_host = 0
+        nbytes = 0
+        n_devices = 1
+        disk_files: set = set()
+        disk_bytes = 0
+        for j, x in enumerate(leaves):
+            if isinstance(x, jax.Array):
+                continue
+            a = np.asarray(x)
+            s = sh_flat[j] if sh_flat is not None else None
+            if s is None:
+                n_shards, shard_bytes = 1, a.size * a.dtype.itemsize
+            else:
+                imap = s.addressable_devices_indices_map(a.shape)
+                n_shards = len(imap)
+                n_devices = max(n_devices, n_shards)
+                shard_bytes = sum(
+                    int(np.prod(_shard_shape(a.shape, idx), dtype=np.int64))
+                    * a.dtype.itemsize
+                    for idx in imap.values()
+                )
+            n_host += n_shards
+            nbytes += shard_bytes
+            if is_disk_leaf(x):
+                disk_files.add(getattr(x, "filename", None) or id(x))
+                disk_bytes += a.size * a.dtype.itemsize
+        fut = TransferFuture(index, None, leaves, n_host, nbytes)
+        fut.n_devices = n_devices
+        fut.disk_requests = len(disk_files)
+        fut.disk_nbytes = disk_bytes
         self._ensure_worker()
-        self._tasks.put(("h2d", fut, group, device_shardings, coalesce, sig, ticket))
+        self._tasks.put(("h2d", fut, group, sh_flat, False, None, None))
         return fut
 
     def submit_writeback(self, index: int, group_out: Pytree) -> _WritebackTicket:
@@ -782,12 +1022,12 @@ class TransferEngine:
                             disk_buf = ticket.buf
                         try:
                             layout = fut.layout
-                            if layout.metas:
+                            if layout.has_payload:
                                 staging = self._acquire_staging(sig, layout)
                                 layout.pack_into(src_leaves, staging)
-                                flat = jax.device_put(staging)
+                                flat = layout.put_staged(staging)
                                 jax.block_until_ready(flat)
-                                if not self._aliases_host(flat, staging):
+                                if not layout.any_alias(flat, staging):
                                     # the device holds its own copy: recycle now
                                     self._release_staging(sig, staging)
                             else:  # everything already device-resident
@@ -801,7 +1041,14 @@ class TransferEngine:
                         fut._complete(flat=flat, ready_at=ready_at)
                     else:
                         if shardings is not None:
-                            tree = jax.device_put(group, shardings)
+                            # per-leaf fallback under explicit placements:
+                            # one device_put per leaf (None -> default)
+                            leaves, treedef = jax.tree.flatten(group)
+                            tree = jax.tree.unflatten(treedef, [
+                                jax.device_put(x, s) if s is not None
+                                else (x if isinstance(x, jax.Array) else jax.device_put(x))
+                                for x, s in zip(leaves, shardings)
+                            ])
                         else:
                             tree = jax.device_put(group)
                         jax.block_until_ready(tree)

@@ -62,6 +62,14 @@ class StreamStats:
     n_transfers: int = 0
     bytes_h2d: int = 0
     bytes_d2h: int = 0
+    #: addressable devices groups staged onto (max over groups; 1 for
+    #: default placement).  With sharding-aware coalescing a group costs
+    #: one request per device, so ``requests_per_group == n_devices``
+    n_devices: int = 1
+    #: sum over groups of that group's device count — the denominator of
+    #: the per-(device, group) request invariant, exact even when one run
+    #: mixes sharded and default-placement groups
+    n_device_groups: int = 0
     transfer_wait_s: float = 0.0  # time the *compute* path blocked on data
     compute_s: float = 0.0
     total_s: float = 0.0
@@ -105,11 +113,18 @@ class StreamStats:
         extended down the hierarchy).  The wait of each tier is the stall
         of the consumer one level up: compute stalls on host->device,
         host->device stalls on disk."""
+        per_dev_groups = self.n_device_groups or self.n_groups
         return {
             "h2d": {
                 "requests": self.h2d_requests,
                 "bytes": self.bytes_h2d,
                 "wait_s": self.transfer_wait_s,
+                "requests_per_group": self.requests_per_group,
+                # sharded groups cost one request per (device, group): 1.0
+                # here is the coalescing invariant under any mesh
+                "requests_per_device_group": (
+                    self.h2d_requests / per_dev_groups if per_dev_groups else 0.0
+                ),
             },
             "d2h": {
                 "requests": self.d2h_requests,
@@ -120,6 +135,7 @@ class StreamStats:
                 "requests": self.disk_requests,
                 "bytes": self.bytes_disk,
                 "wait_s": self.disk_wait_s,
+                "requests_per_group": self.disk_requests_per_group,
             },
         }
 
@@ -173,8 +189,13 @@ class HostStreamExecutor:
         the paper's ``rw`` access modifier, used e.g. for streamed optimizer
         state which must be copied back to its home kind).
     device_shardings:
-        optional pytree of shardings for the staged groups (disables
-        coalescing — the per-leaf path honours explicit placements).
+        optional pytree of shardings for the staged groups, broadcast over
+        every group.  Coalescing composes with explicit placements: each
+        group stages through one buffer per addressable device (one H2D
+        request per device per group) and the staged leaves are bitwise
+        equal to eager sharded placement.  Per-run heterogeneous layouts
+        (e.g. optimizer leaf groups) pass ``group_shardings`` to
+        :meth:`run` instead.
     engine / engine_config:
         the transfer engine to run on.  By default a private engine with
         ``EngineConfig()`` (coalescing + async writeback) is created;
@@ -213,11 +234,15 @@ class HostStreamExecutor:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    #: sentinel: "no per-group override" (None is a valid override meaning
+    #: default placement)
+    _UNSET = object()
+
     # -- transfer primitive (the paper's channel cell write) ----------------
-    def _submit(self, index: int, group: Pytree):
-        return self._engine.submit_group(
-            index, group, device_shardings=self._shardings
-        )
+    def _submit(self, index: int, group: Pytree, shardings: Any = _UNSET):
+        if shardings is self._UNSET:
+            shardings = self._shardings
+        return self._engine.submit_group(index, group, device_shardings=shardings)
 
     def run(
         self,
@@ -227,9 +252,15 @@ class HostStreamExecutor:
         prefetch: Optional[PrefetchSpec] = None,
         mode: str = "prefetch",
         stats: Optional[StreamStats] = None,
+        group_shardings: Optional[Sequence[Pytree]] = None,
     ) -> tuple[Pytree, Optional[list]]:
         """Execute all groups under the given schedule.  Returns the final
-        carry (+ written-back host groups when ``writeback``)."""
+        carry (+ written-back host groups when ``writeback``).
+
+        ``group_shardings``: optional per-group shardings (one pytree per
+        group, aligned with ``groups``) for runs whose groups have
+        heterogeneous layouts; overrides the constructor's broadcast
+        ``device_shardings``."""
         if mode not in ("eager", "on_demand", "prefetch"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "prefetch" and prefetch is None:
@@ -267,17 +298,29 @@ class HostStreamExecutor:
         outs: Optional[list] = [] if self._writeback else None
         n = len(groups)
 
+        if group_shardings is not None and len(group_shardings) != n:
+            raise ValueError(
+                f"group_shardings has {len(group_shardings)} entries for "
+                f"{n} groups"
+            )
+
+        def submit(i: int):
+            if group_shardings is None:
+                fut = self._submit(i, groups[i])
+            else:  # per-group override, authoritative (None = default)
+                fut = self._submit(i, groups[i], group_shardings[i])
+            st.n_transfers += 1
+            st.h2d_requests += fut.n_requests
+            st.bytes_h2d += fut.nbytes
+            st.disk_requests += fut.disk_requests
+            st.bytes_disk += fut.disk_nbytes
+            st.n_devices = max(st.n_devices, fut.n_devices)
+            st.n_device_groups += fut.n_devices
+            return fut
+
         if mode == "eager":
             # bulk transfer first — the paper's original kernel invocation
-            futs = []
-            for i, grp in enumerate(groups):
-                fut = self._submit(i, grp)
-                st.n_transfers += 1
-                st.h2d_requests += fut.n_requests
-                st.bytes_h2d += fut.nbytes
-                st.disk_requests += fut.disk_requests
-                st.bytes_disk += fut.disk_nbytes
-                futs.append(fut)
+            futs = [submit(i) for i in range(n)]
             for fut in futs:
                 w = fut.wait()
                 st.transfer_wait_s += w
@@ -295,13 +338,7 @@ class HostStreamExecutor:
             for i in range(n):
                 # top up the pipeline to `distance` groups ahead
                 while issued <= min(i + distance, n - 1):
-                    fut = self._submit(issued, groups[issued])
-                    st.n_transfers += 1
-                    st.h2d_requests += fut.n_requests
-                    st.bytes_h2d += fut.nbytes
-                    st.disk_requests += fut.disk_requests
-                    st.bytes_disk += fut.disk_nbytes
-                    inflight[issued] = fut
+                    inflight[issued] = submit(issued)
                     issued += 1
                 fut = inflight.pop(i)
                 # the paper's blocking fetch: the core stalls until data

@@ -52,6 +52,7 @@ __all__ = [
     "PageStream",
     "KVPager",
     "assemble_view",
+    "page_template",
     "paged_cache_supported",
 ]
 
@@ -88,6 +89,22 @@ def paged_cache_supported(cache_template: Pytree) -> bool:
         if name not in ("k", "v") or np.ndim(leaf) < 4:
             return False
     return True
+
+
+def page_template(cache_template: Pytree, page_len: int) -> Pytree:
+    """Abstract tree of ONE page: the cache template with its context axis
+    cut to ``page_len`` (the shape the sharding rules — and the engine's
+    per-device layouts — see for every transfer group)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            tuple(
+                page_len if d == _time_axis(l) else s
+                for d, s in enumerate(l.shape)
+            ),
+            l.dtype,
+        ),
+        cache_template,
+    )
 
 
 def assemble_view(view) -> Pytree:
@@ -192,8 +209,13 @@ class PageStream:
         max_distance: int = 8,
         wait_eps_s: float = 100e-6,
         shrink_after: int = 4,
+        device_shardings: Optional[Pytree] = None,
     ) -> None:
         self._engine = engine
+        #: per-page placement (the serve plan's cache specs): the engine
+        #: stages one buffer per addressable device per page group instead
+        #: of falling back to default single-device placement
+        self._shardings = device_shardings
         self._auto = distance == AUTO
         self._static = None if self._auto else max(1, int(distance))
         self._ctl_kw = dict(
@@ -224,7 +246,9 @@ class PageStream:
         return sum(1 for (r, _p) in self._inflight if r == rid)
 
     def _submit(self, key: tuple, tree: Pytree):
-        fut = self._engine.submit_group(self._seq, tree)
+        fut = self._engine.submit_group(
+            self._seq, tree, device_shardings=self._shardings
+        )
         self._seq += 1
         self._inflight[key] = fut
         return fut
@@ -260,6 +284,8 @@ class PageStream:
         stats.wait_per_group.append(w)
         stats.disk_wait_s += fut.disk_wait_s
         stats.disk_wait_per_group.append(fut.disk_wait_s)
+        stats.n_devices = max(stats.n_devices, fut.n_devices)
+        stats.n_device_groups += fut.n_devices
         if self._auto:
             self._step_waits[rid] = self._step_waits.get(rid, 0.0) + w
         stats.distance_trace.append(self.window(rid))
@@ -333,10 +359,15 @@ class KVPager:
         slots: int,
         engine: TransferEngine,
         store=None,
+        device_shardings: Optional[Pytree] = None,
     ) -> None:
         """``cache_template``: abstract per-slot cache tree (batch dim 1,
         context dim = the padded maximum length, a multiple of
-        ``page_len``)."""
+        ``page_len``).  ``device_shardings``: optional pytree (congruent
+        with one page — see :func:`page_template`) of ``NamedSharding``s;
+        fetched cold pages stage at these placements through the engine's
+        sharding-aware coalescing (one H2D request per device per page
+        group under ``--model-parallel``)."""
         if not paged_cache_supported(cache_template):
             raise ValueError(
                 "paged KV serving requires a full-attention k/v cache "
@@ -357,16 +388,7 @@ class KVPager:
                 f"page_len {config.page_len}"
             )
         self.n_pages = self.max_len // config.page_len
-        page_shapes = jax.tree.map(
-            lambda l: jax.ShapeDtypeStruct(
-                tuple(
-                    config.page_len if d == _time_axis(l) else s
-                    for d, s in enumerate(l.shape)
-                ),
-                l.dtype,
-            ),
-            cache_template,
-        )
+        page_shapes = page_template(cache_template, config.page_len)
         self.page_nbytes = sum(
             int(np.prod(s.shape)) * s.dtype.itemsize
             for s in jax.tree.leaves(page_shapes)
@@ -385,6 +407,7 @@ class KVPager:
             max_distance=config.max_distance,
             wait_eps_s=config.wait_eps_s,
             shrink_after=config.shrink_after,
+            device_shardings=device_shardings,
         )
         self._wb_seq = 0
         self._pending_demotions: list[tuple[PageTable, int]] = []

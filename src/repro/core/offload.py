@@ -207,6 +207,13 @@ class OffloadedFunction:
         ``PrefetchSpec(distance="auto")`` (runtime-adaptive window) and is
         numerically identical to ``__call__``/``eager``.
 
+        Under a multi-device mesh the streamed blocks are staged at each
+        ref's *device* sharding through the engine's sharding-aware
+        coalescing: one H2D request per (addressable device, block group)
+        — the per-leaf fallback that re-introduced the request storm under
+        ``--model-parallel`` is gone — and staged blocks are bitwise equal
+        to eager sharded placement.
+
         ``policy`` (a :class:`~repro.core.memkind.PlacementPolicy`)
         overrides the home tier of the streamed arguments at call time —
         its ``params`` kind applies to every streamed ref.  A non-XLA kind
@@ -248,13 +255,18 @@ class OffloadedFunction:
             )
 
         # the executor (and its jitted per-block apply + engine worker) is
-        # built once per (streamed-arg set, kinds, engine) and reused across
-        # calls; the fixed arguments travel in the carry, so new values
-        # don't retrace
+        # built once per (streamed-arg set, kinds, engine, mesh, streamed
+        # tree structure) and reused across calls; the fixed arguments
+        # travel in the carry, so new values don't retrace.  The structure
+        # is part of the key because the executor's broadcast
+        # device_shardings are derived from it — a different pytree shape
+        # for the same arg name needs a fresh executor
         key = (
             tuple(stream_names),
             tuple(k.jax_kind for k in kinds),
             id(engine) if engine is not None else None,
+            self.mesh(),
+            tuple(jax.tree.structure(streamed_vals[n]) for n in stream_names),
         )
         ex = self._stream_host_cache.get(key)
         if ex is None:
@@ -264,7 +276,16 @@ class OffloadedFunction:
             def apply(carry, block):
                 return carry, base(**carry, **dict(zip(stream_names, block)))
 
-            ex = HostStreamExecutor(apply, writeback=True, engine=engine)
+            # stage each block at its ref's device sharding: under a mesh
+            # the engine packs one buffer per (device, group) instead of
+            # falling back to per-leaf placement
+            dev_sh = tuple(
+                jax.tree.map(lambda _: self._device_sharding(n), streamed_vals[n])
+                for n in stream_names
+            )
+            ex = HostStreamExecutor(
+                apply, writeback=True, engine=engine, device_shardings=dev_sh
+            )
             self._stream_host_cache[key] = ex
 
         groups = [

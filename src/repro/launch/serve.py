@@ -36,7 +36,12 @@ from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core import memkind as mk
 from repro.core.engine import TransferEngine
 from repro.core.hoststream import StreamStats
-from repro.core.kvpager import KVPager, KVPagerConfig, paged_cache_supported
+from repro.core.kvpager import (
+    KVPager,
+    KVPagerConfig,
+    page_template,
+    paged_cache_supported,
+)
 from repro.core.refspec import AUTO
 from repro.core.spillstore import SpillStore
 from repro.launch.mesh import make_local_mesh
@@ -158,12 +163,20 @@ class ServeSession:
                 spill_dir = tempfile.mkdtemp(prefix="repro-serve-kv-")
             self._store = SpillStore(spill_dir, ephemeral=ephemeral)
 
+        # cold pages stage at the serve plan's cache specs (derived on the
+        # *page* shape so divisibility fallbacks see what actually moves):
+        # under --model-parallel a fetched page group costs one coalesced
+        # H2D request per device, not one per leaf
+        page_specs = sh.cache_specs_tree(
+            self.plan, page_template(template, page_len), 1
+        )
         self.pager = KVPager(
             template,
             pager_cfg,
             slots=slots,
             engine=self._engine,
             store=self._store,
+            device_shardings=sh.named_shardings(mesh, page_specs),
         )
         self._prefill = jax.jit(
             st.make_prefill_step(cfg, 1, self.max_len, mesh, self.sharder)

@@ -17,8 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.data.loader import PrefetchLoader
 from repro.data.synthetic import SyntheticConfig, synthetic_batch
@@ -30,9 +28,7 @@ from repro.train import steps as st
 
 
 def _shardings(mesh, specs):
-    return jax.tree.map(
-        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda s: isinstance(s, P)
-    )
+    return sh.named_shardings(mesh, specs)
 
 
 def build_trainer(
@@ -193,6 +189,9 @@ def build_trainer(
             engine=engine,
             stats=stream_stats,
             spill_store=spill_store,
+            # moments stage at the plan's opt specs (sharded coalescing:
+            # one H2D request per device per group under --model-parallel)
+            state_shardings=o_sh["leaves"],
         )
 
         budget_bytes = int(host_budget_mb * 1e6) if host_budget_mb else 0

@@ -48,7 +48,6 @@ def compress_int8(
         return q, scale, err
 
     if error is None:
-        error = jax.tree.map(lambda _: None, grads, is_leaf=lambda x: x is None)
         flat_e = [None] * len(jax.tree.leaves(grads))
     else:
         flat_e = jax.tree.leaves(error)
@@ -67,18 +66,53 @@ def decompress_int8(payload: Pytree, scales: Pytree) -> Pytree:
     )
 
 
+def requantize_int8(
+    payload: Pytree, scales: Pytree, target_scales: Pytree
+) -> tuple[Pytree, Pytree]:
+    """Rescale an int8 payload quantized at ``scales`` onto
+    ``target_scales``.
+
+    Returns ``(payload', extra_error)`` with the exact identity
+    ``q * s == q' * t + extra_error`` per leaf, so the re-quantization
+    residual can join the error-feedback state.  With ``t >= s`` (the
+    cross-pod pmax) no value clips: ``|q * s| <= 127 s <= 127 t``.
+    """
+
+    def leaf(q, s, t):
+        v = q.astype(jnp.float32) * s
+        q2 = jnp.clip(jnp.round(v / t), -127, 127).astype(jnp.int8)
+        return q2, v - q2.astype(jnp.float32) * t
+
+    flat_q, treedef = jax.tree.flatten(payload)
+    flat_s = jax.tree.leaves(scales)
+    flat_t = jax.tree.leaves(target_scales)
+    qs, errs = zip(*(leaf(q, s, t) for q, s, t in zip(flat_q, flat_s, flat_t)))
+    return treedef.unflatten(list(qs)), treedef.unflatten(list(errs))
+
+
 def pod_allreduce_int8(grads: Pytree, axis: str, error: Pytree) -> tuple[Pytree, Pytree]:
     """int8-compressed psum over ``axis`` (use under shard_map).
 
-    Each pod contributes int8; the sum happens in int32 (no overflow for
-    <= 2^23 pods) and is rescaled by the max scale (conservative)."""
+    All pods must agree on ONE quantization scale before integer payloads
+    can be summed: the shared scale is the elementwise ``pmax`` of the
+    per-pod scales, each pod re-quantizes its payload onto it, and the
+    re-quantization residual joins the error-feedback state (the identity
+    ``contribution + error == gradient`` is preserved exactly).  The sum
+    happens in int32 (no overflow for <= 2^23 pods) and is rescaled by the
+    shared scale.  Summing payloads quantized under *different* per-pod
+    scales and rescaling by the max — the previous behaviour — inflates a
+    small-scale pod's contribution by ``pmax / scale``, which for pods
+    with very different gradient magnitudes is orders of magnitude.
+    """
     q, scales, err = compress_int8(grads, error)
+    pmax = jax.tree.map(lambda s: jax.lax.pmax(s, axis), scales)
+    q, extra = requantize_int8(q, scales, pmax)
+    err = jax.tree.map(jnp.add, err, extra)
     summed = jax.tree.map(
         lambda x: jax.lax.psum(x.astype(jnp.int32), axis), q
     )
     n = jax.lax.psum(1, axis)
-    max_scale = jax.tree.map(lambda s: jax.lax.pmax(s, axis), scales)
     out = jax.tree.map(
-        lambda si, s: si.astype(jnp.float32) * s / n, summed, max_scale
+        lambda si, s: si.astype(jnp.float32) * s / n, summed, pmax
     )
     return out, err

@@ -293,6 +293,21 @@ def opt_state_specs(
     return {"leaves": leaves_specs, "step": P()}
 
 
+def named_shardings(mesh: Mesh, specs: Pytree) -> Pytree:
+    """``NamedSharding`` tree (device memory) from a ``PartitionSpec`` tree.
+
+    The device-placement form every streaming consumer hands the transfer
+    engine (``device_shardings`` / ``state_shardings``): sharding-aware
+    coalescing stages one buffer per addressable device from these, so a
+    group costs ``n_devices`` H2D requests instead of one per leaf shard.
+    """
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
 def batch_spec(plan: ShardingPlan) -> P:
     """(batch, ...) leading-dim spec."""
     return P(plan.batch_axes)

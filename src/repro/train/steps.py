@@ -162,6 +162,7 @@ def make_streamed_opt_updater(
     mode: str = "prefetch",
     engine: Optional[TransferEngine] = None,
     spill_store=None,
+    state_shardings: Optional[Pytree] = None,
 ) -> Callable[..., tuple[Pytree, dict, dict]]:
     """Build ``update(grads, host_state, stats=None) -> (new_params,
     new_host_state, metrics)`` with host-resident optimizer state.
@@ -183,6 +184,13 @@ def make_streamed_opt_updater(
     their updated moments are written back to ``spill_store`` after the
     D2H drain, so the state never occupies more host RAM than the budgeted
     groups plus the engine's staging pools.
+
+    ``state_shardings`` (a pytree congruent with ``host_state["leaves"]``:
+    one device ``NamedSharding`` per master/m/v leaf — the sharding plan's
+    opt-state specs) places each streamed moment group at its planned
+    multi-device layout instead of default single-device placement, via
+    the engine's sharding-aware coalescing (one H2D request per
+    addressable device per group).
     """
     prefetch = prefetch or PrefetchSpec(buffer_size=n_groups, distance=1)
 
@@ -199,6 +207,9 @@ def make_streamed_opt_updater(
 
     own_engine = engine
     executor_box: list = []  # lazily built so the updater is picklable-ish
+    #: per-group sharding lists, keyed by the grads treedef (static across
+    #: steps — rebuilt only when the param structure changes)
+    group_shardings_cache: dict = {}
 
     def _executor() -> HostStreamExecutor:
         if not executor_box:
@@ -232,8 +243,31 @@ def make_streamed_opt_updater(
             }
             for i in range(len(bounds) - 1)
         ]
+        group_shardings = None
+        if state_shardings is not None:
+            # per-group layouts mirroring the group partition: grads are
+            # device-resident (pass-by-reference; None = no placement),
+            # moments stage at the plan's opt specs
+            group_shardings = group_shardings_cache.get(treedef)
+            if group_shardings is None:
+                flat_sh = treedef.flatten_up_to(state_shardings)
+                group_shardings = [
+                    {
+                        "g": tuple([None] * (bounds[i + 1] - bounds[i])),
+                        "s": tuple(flat_sh[bounds[i] : bounds[i + 1]]),
+                    }
+                    for i in range(len(bounds) - 1)
+                ]
+                group_shardings_cache[treedef] = group_shardings
 
-        _, state_outs = ex.run(glob, groups, mode=mode, prefetch=prefetch, stats=stats)
+        _, state_outs = ex.run(
+            glob,
+            groups,
+            mode=mode,
+            prefetch=prefetch,
+            stats=stats,
+            group_shardings=group_shardings,
+        )
 
         # disk-homed groups go back to their home tier: write the updated
         # moments to the spill store and keep only the memmap views
@@ -272,6 +306,7 @@ def make_streamed_train_step(
     engine: Optional[TransferEngine] = None,
     stats: Optional[StreamStats] = None,
     spill_store=None,
+    state_shardings: Optional[Pytree] = None,
 ) -> Callable[[dict, Pytree], tuple[dict, dict]]:
     """``(state, batch) -> (state, metrics)`` with host-resident optimizer.
 
@@ -280,7 +315,9 @@ def make_streamed_train_step(
     moments through the transfer engine (see ``make_streamed_opt_updater``).
     With ``spill_store``, moment groups spilled to the ``DiskHost`` tier
     (see :func:`spill_opt_state`) stream disk->host->device and write back
-    to disk.
+    to disk.  ``state_shardings`` places the streamed moment groups at the
+    sharding plan's opt specs (one coalesced H2D request per device per
+    group under a mesh).
     """
     grad_fn = jax.jit(make_grad_step(cfg, mesh, sharder))
     updater = make_streamed_opt_updater(
@@ -290,6 +327,7 @@ def make_streamed_train_step(
         prefetch=prefetch,
         engine=engine,
         spill_store=spill_store,
+        state_shardings=state_shardings,
     )
 
     def step_fn(state, batch):

@@ -18,6 +18,9 @@ larger than the host budget, sourced from disk, same values) and the
 ``stream_host`` executor-cache regression (cache must key on policy/kinds,
 not just the streamed-arg set).
 """
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -281,6 +284,131 @@ def test_disk_opt_trainer_end_to_end_and_restore_respills(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# sharded axis: the same matrix on a forced 2-device host mesh
+# ---------------------------------------------------------------------------
+
+_SHARDED_MATRIX_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import memkind as mk
+from repro.core.engine import TransferEngine
+from repro.core.hoststream import HostStreamExecutor, StreamStats
+from repro.core.refspec import AUTO, PrefetchSpec
+from repro.core.spillstore import SpillStore
+from repro.jaxcompat import make_mesh
+
+N_GROUPS = 4
+assert len(jax.devices()) == 2, jax.devices()
+mesh = make_mesh((1, 2), ("data", "model"))
+# one model-sharded leaf, one replicated bf16 leaf per group
+shardings = {"w": NamedSharding(mesh, P(None, "model")),
+             "b": NamedSharding(mesh, P())}
+rng = np.random.default_rng(7)
+groups_host = [
+    {"w": rng.standard_normal((4, 4)).astype(np.float32),
+     "b": np.asarray(jnp.asarray(rng.standard_normal((4,)), jnp.bfloat16))}
+    for _ in range(N_GROUPS)
+]
+
+def groups_at(kind, tmp):
+    if kind.jax_kind == "device":
+        return [jax.device_put(g, shardings) for g in groups_host]
+    if not kind.jax_addressable:
+        store = SpillStore(tmp)
+        out = []
+        for i, g in enumerate(groups_host):
+            store.put(f"g{i}", g)
+            out.append(store.get(f"g{i}"))
+        return out
+    return groups_host
+
+@jax.jit
+def apply_ro(carry, g):
+    return carry + jnp.sum(g["w"]) * 2.0 + jnp.sum(g["b"].astype(jnp.float32))
+
+@jax.jit
+def apply_rw(carry, g):
+    return carry + jnp.sum(g["w"]), {"w": g["w"] * 2.0 + 1.0, "b": g["b"]}
+
+# engine level: staged leaves carry the exact sharding AND bytes of eager
+# sharded placement
+eng = TransferEngine()
+fut = eng.submit_group(0, groups_host[0], device_shardings=shardings)
+fut.wait()
+staged = fut.group()
+eager0 = jax.device_put(groups_host[0], shardings)
+for k in ("w", "b"):
+    assert staged[k].sharding == eager0[k].sharding, (k, staged[k].sharding)
+    np.testing.assert_array_equal(np.asarray(staged[k]), np.asarray(eager0[k]))
+assert fut.n_requests == 2 and fut.n_devices == 2, (fut.n_requests, fut.n_devices)
+eng.close()
+
+eager_groups = [jax.device_put(g, shardings) for g in groups_host]
+for access in ("ro", "rw"):
+    wb = access == "rw"
+    apply = apply_rw if wb else apply_ro
+    with HostStreamExecutor(apply, writeback=wb, device_shardings=shardings) as ex:
+        ref, ref_outs = ex.run(jnp.zeros(()), eager_groups, mode="eager")
+    for kind in mk.all_kinds():
+        for dist in (0, 1, AUTO):
+            tmp = tempfile.mkdtemp(prefix=f"conf-{kind.jax_kind}-")
+            groups = groups_at(kind, tmp)
+            mode = "on_demand" if dist == 0 else "prefetch"
+            pf = None if dist == 0 else PrefetchSpec(
+                buffer_size=N_GROUPS + 2, distance=dist)
+            st = StreamStats()
+            with HostStreamExecutor(apply, writeback=wb,
+                                    device_shardings=shardings) as ex:
+                out, outs = ex.run(jnp.zeros(()), groups, mode=mode,
+                                   prefetch=pf, stats=st)
+            cell = (kind.jax_kind, access, dist)
+            # bitwise vs eager sharded placement at every kind x schedule
+            assert float(out) == float(ref), cell
+            if wb:
+                for o, ro in zip(outs, ref_outs):
+                    for a, b in zip(jax.tree.leaves(o), jax.tree.leaves(ro)):
+                        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            # per-device request accounting: one request per (device, group)
+            assert st.n_groups == N_GROUPS, cell
+            tier = st.per_tier()
+            if kind.jax_kind == "device":
+                assert st.h2d_requests == 0 and st.disk_requests == 0, cell
+                assert st.n_devices == 1, cell
+            else:
+                assert st.n_devices == 2, cell
+                assert st.h2d_requests == 2 * N_GROUPS, (cell, st.h2d_requests)
+                assert st.requests_per_group == 2.0, cell
+                assert tier["h2d"]["requests_per_device_group"] == 1.0, cell
+                if kind.jax_addressable:
+                    assert st.disk_requests == 0, cell
+                else:
+                    assert st.disk_requests == N_GROUPS, cell
+                    assert st.bytes_disk > 0, cell
+print("SHARDED_CONFORMANCE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_conformance_matrix_2way_mesh():
+    """The tentpole pin: every MemKind x ro/rw x distance 0/1/auto on a
+    forced 2-device host mesh — bitwise equal to eager sharded placement,
+    exactly one H2D request per (device, group)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_MATRIX_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+             "HOME": "/root"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED_CONFORMANCE_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
 # regression: stream_host executor cache must key on policy/kinds/engine
 # ---------------------------------------------------------------------------
 
@@ -320,3 +448,27 @@ def test_stream_host_cache_keys_on_policy_and_engine(tmp_path):
     finally:
         k.close()
         eng.close()
+
+
+def test_stream_host_cache_keys_on_streamed_tree_structure():
+    """The executor's broadcast device_shardings are derived from the first
+    call's streamed pytree structure; a different structure for the same
+    arg name must build a fresh executor instead of tripping a leaf-count
+    mismatch (found in review of the sharded-coalescing change)."""
+    spec = PrefetchSpec(buffer_size=4, elements_per_fetch=2, distance=1)
+
+    @offload(refs=dict(x=OffloadRef(kind=mk.PINNED_HOST, prefetch=spec)))
+    def k(x):
+        return jax.tree.map(lambda a: a + 1.0, x)
+
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal((8, 3)).astype(np.float32)
+    b = rng.standard_normal((8, 3)).astype(np.float32)
+    try:
+        out1 = k.stream_host({"a": a})
+        out2 = k.stream_host({"a": a, "b": b})  # same arg, wider pytree
+        assert len(k._stream_host_cache) == 2
+        np.testing.assert_allclose(out1["a"], a + 1.0, rtol=1e-6)
+        np.testing.assert_allclose(out2["b"], b + 1.0, rtol=1e-6)
+    finally:
+        k.close()

@@ -1,6 +1,8 @@
 """Runtime-layer tests: checkpointing, fault tolerance, elastic, stragglers,
 optimizer, data determinism, gradient compression."""
 import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +77,56 @@ def test_checkpoint_async(tmp_path):
     mgr.save(7, _tree())
     mgr.wait()
     assert mgr.latest_step() == 7
+
+
+def test_checkpoint_overwrite_crash_window_keeps_old_copy(tmp_path, monkeypatch):
+    """A crash at the commit rename while overwriting a step must not lose
+    the previous copy (the seed rmtree'd it *before* the rename)."""
+    import pathlib
+
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree(0), blocking=True)
+
+    real_rename = pathlib.Path.rename
+
+    def boom(self, target):
+        if self.name.endswith(".tmp"):
+            raise OSError("injected crash at commit")
+        return real_rename(self, target)
+
+    monkeypatch.setattr(pathlib.Path, "rename", boom)
+    with pytest.raises(OSError, match="injected"):
+        mgr.save(1, _tree(1), blocking=True)
+    monkeypatch.undo()
+
+    step, restored = mgr.restore(jax.eval_shape(lambda: _tree()))
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(_tree(0))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not list(tmp_path.glob("*.old"))  # rolled back, nothing dangling
+
+
+def test_checkpoint_init_sweeps_stale_tmp_and_recovers_old(tmp_path):
+    """Leftovers of a crashed save: partial .tmp dirs are deleted on init;
+    a .old whose commit never landed is restored as the step."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(5, _tree(5), blocking=True)
+    (tmp_path / "step_00000007.tmp").mkdir()
+    old = tmp_path / "step_00000003.old"
+    old.mkdir()
+    mgr2 = CheckpointManager(tmp_path, keep=3)
+    assert not (tmp_path / "step_00000007.tmp").exists()
+    assert (tmp_path / "step_00000003").exists()  # crash-window recovery
+    assert mgr2.all_steps() == [3, 5]
+
+
+def test_checkpoint_keep_zero_keeps_all_negative_rejected(tmp_path):
+    with pytest.raises(ValueError):
+        CheckpointManager(tmp_path / "bad", keep=-1)
+    mgr = CheckpointManager(tmp_path, keep=0)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s), blocking=True)
+    assert mgr.all_steps() == [1, 2, 3, 4]  # keep=0: keep all, documented
 
 
 def test_checkpoint_elastic_reshard(tmp_path):
@@ -279,3 +331,73 @@ def test_bf16_compress_roundtrip_close():
     g = {"w": jnp.linspace(-2, 2, 64)}
     back = gc.decompress_bf16(gc.compress_bf16(g))
     np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(g["w"]), atol=2e-2)
+
+
+def test_int8_requantize_identity_and_no_clip():
+    """q*s == q'*t + extra_error exactly (f32), for t = the cross-pod max
+    scale; nothing clips because |q*s| <= 127 s <= 127 t."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(3), (64,)) * 1e-3}
+    q, s, _ = gc.compress_int8(g)
+    t = jax.tree.map(lambda x: x * 1000.0, s)  # a much-larger shared scale
+    q2, extra = gc.requantize_int8(q, s, t)
+    lhs = np.asarray(q["w"], np.float32) * float(s["w"])
+    rhs = np.asarray(q2["w"], np.float32) * float(t["w"]) + np.asarray(extra["w"])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-6, atol=1e-12)
+    assert np.abs(np.asarray(q2["w"], np.int32)).max() <= 127
+
+
+_POD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+from functools import partial
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.jaxcompat import make_mesh
+from repro.optim import grad_compress as gc
+
+mesh = make_mesh((2,), ("pod",))
+# two pods with VERY different gradient magnitudes: the seed bug psummed
+# raw int8 quantized under per-pod scales, inflating pod 0's contribution
+# by pmax/scale0 ~ 1e4
+g0 = np.linspace(-1e-3, 1e-3, 32, dtype=np.float32)
+g1 = np.linspace(-10.0, 10.0, 32, dtype=np.float32)
+stacked = jnp.stack([g0, g1])
+err0 = jnp.zeros((2, 32), jnp.float32)
+
+@partial(shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
+         out_specs=(P("pod"), P("pod")))
+def reduce_fn(g, e):
+    out, err = gc.pod_allreduce_int8({"w": g[0]}, "pod", {"w": e[0]})
+    return out["w"][None], err["w"][None]
+
+out, err = jax.jit(reduce_fn)(stacked, err0)
+out, err = np.asarray(out), np.asarray(err)
+true_mean = (g0 + g1) / 2
+pmax = max(np.abs(g0).max(), np.abs(g1).max()) / 127.0
+assert np.allclose(out[0], out[1]), "allreduce must agree across pods"
+# shared-scale quantization error is O(pmax) per contribution; the seed
+# bug's inflation error was ~ |g0| * pmax/s0 / 2 ~ 5.0 >> pmax
+worst = np.abs(out[0] - true_mean).max()
+assert worst <= pmax + 1e-6, (worst, pmax)
+# error feedback closes the loop exactly: contribution(=g-err) sums to out
+c0, c1 = g0 - err[0], g1 - err[1]
+np.testing.assert_allclose((c0 + c1) / 2, out[0], rtol=1e-5, atol=1e-7)
+print("POD_ALLREDUCE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_pod_allreduce_int8_shared_scale_2pods():
+    """shard_map pin for the cross-pod scale bug: pods with gradients of
+    very different magnitude must agree on one scale before the psum."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _POD_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+             "HOME": "/root"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "POD_ALLREDUCE_OK" in proc.stdout
