@@ -22,11 +22,12 @@ SUITES = {
     "disk": ("benchmarks.disk_tier", "DiskHost three-level streaming (modeled disk link)"),
     "serve": ("benchmarks.serve_paged", "paged KV-cache serving vs per-step placement"),
     "shard": ("benchmarks.shard_stream", "sharding-aware coalescing vs per-leaf fallback (2-device mesh)"),
+    "weights": ("benchmarks.weight_stream", "streamed model parameters under a device budget (modeled link)"),
 }
 
 #: the suites driven purely by the deterministic LinkModel emulation —
 #: meaningful on a noisy CI runner, unlike the wall-clock studies
-SMOKE_SUITES = ["engine", "disk", "serve", "shard"]
+SMOKE_SUITES = ["engine", "disk", "serve", "shard", "weights"]
 
 
 def main() -> int:

@@ -108,9 +108,28 @@ class CheckpointManager:
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Pytree, *, blocking: bool = False) -> None:
         """Snapshot ``tree`` at ``step``.  D2H happens here (synchronous);
-        file I/O happens on a background thread unless ``blocking``."""
+        file I/O happens on a background thread unless ``blocking``.
+
+        Device leaves are copied to host now (they may be donated into the
+        next step).  Host- and disk-homed leaves (numpy / spill-store
+        memmaps — the weight-streamed trainer's home representation) are
+        snapshotted **by reference** and serialized leaf-by-leaf on the
+        writer thread, so saving a host/disk-homed state never materializes
+        the full tree in host RAM (or on device) at once.  This assumes
+        homes are *replaced*, not mutated in place, between steps — true
+        for every streamed trainer (drained writebacks are fresh arrays,
+        and spill-store overwrites are atomic tmp+rename, which keeps an
+        old mapping valid)."""
         self.wait()
-        host = [(name, np.asarray(jax.device_get(x))) for name, x in _flatten(tree)]
+
+        def _host_leaf(x):
+            if isinstance(x, jax.Array):
+                return np.asarray(jax.device_get(x))
+            # numpy/memmap home leaves: keep the reference (no copy);
+            # anything else (python scalars) still snapshots eagerly
+            return x if isinstance(x, np.ndarray) else np.asarray(x)
+
+        host = [(name, _host_leaf(x)) for name, x in _flatten(tree)]
         treedef = jax.tree.structure(tree)
         meta = {
             "step": int(step),

@@ -39,6 +39,11 @@ from repro.core.kvpager import (
     paged_cache_supported,
 )
 from repro.core.offload import offload
+from repro.core.weightstream import (
+    WeightGroup,
+    WeightStreamPlan,
+    weight_stream_supported,
+)
 from repro.core.prefetch import eager_transfer, fetch_chunk, stream_blocks, streamed_scan
 from repro.core.refspec import AUTO, Access, OffloadRef, PrefetchSpec
 from repro.core.hoststream import HostStreamExecutor, StreamStats
@@ -87,4 +92,7 @@ __all__ = [
     "PageStream",
     "assemble_view",
     "paged_cache_supported",
+    "WeightGroup",
+    "WeightStreamPlan",
+    "weight_stream_supported",
 ]

@@ -79,6 +79,10 @@ class StreamStats:
     n_groups: int = 0
     n_runs: int = 0
     writeback_drain_s: float = 0.0
+    #: max H2D payload bytes of groups simultaneously in flight (submitted
+    #: but not yet consumed by their apply) — the schedule's device-residency
+    #: model for streamed state; what ``--device-budget-mb`` gates against
+    peak_inflight_bytes: int = 0
     # -- disk tier (DiskHost groups: stage-1 of the three-level pipeline) ---
     disk_requests: int = 0
     bytes_disk: int = 0
@@ -201,6 +205,11 @@ class HostStreamExecutor:
         ``EngineConfig()`` (coalescing + async writeback) is created;
         pass ``EngineConfig(coalesce=False, async_writeback=False)`` to
         reproduce the seed executor's per-leaf blocking schedule.
+    indexed:
+        call ``apply(i, carry, group)`` with the group's position in the
+        run — for heterogeneous group sequences whose apply dispatches per
+        stage (the weight-streaming path: embed / layer groups / head are
+        different jitted programs over one streamed sequence).
     """
 
     def __init__(
@@ -211,9 +220,11 @@ class HostStreamExecutor:
         device_shardings: Optional[Pytree] = None,
         engine: Optional[TransferEngine] = None,
         engine_config: Optional[EngineConfig] = None,
+        indexed: bool = False,
     ) -> None:
         self._apply = apply
         self._writeback = writeback
+        self._indexed = indexed
         self._shardings = device_shardings
         self._engine = engine or TransferEngine(engine_config)
         self._owns_engine = engine is None
@@ -304,7 +315,13 @@ class HostStreamExecutor:
                 f"{n} groups"
             )
 
+        #: H2D payload bytes of submitted-but-not-yet-consumed groups — the
+        #: streamed-state device-residency model (peak gated by the weight
+        #: streamer's --device-budget-mb)
+        live_bytes = 0
+
         def submit(i: int):
+            nonlocal live_bytes
             if group_shardings is None:
                 fut = self._submit(i, groups[i])
             else:  # per-group override, authoritative (None = default)
@@ -316,6 +333,8 @@ class HostStreamExecutor:
             st.bytes_disk += fut.disk_nbytes
             st.n_devices = max(st.n_devices, fut.n_devices)
             st.n_device_groups += fut.n_devices
+            live_bytes += fut.nbytes
+            st.peak_inflight_bytes = max(st.peak_inflight_bytes, live_bytes)
             return fut
 
         if mode == "eager":
@@ -328,8 +347,9 @@ class HostStreamExecutor:
                 st.disk_wait_s += fut.disk_wait_s
                 st.disk_wait_per_group.append(fut.disk_wait_s)
             t0 = time.perf_counter()
-            for fut in futs:
-                carry = self._step(carry, fut.group(), outs, st)
+            for i, fut in enumerate(futs):
+                carry = self._step(i, carry, fut.group(), outs, st)
+                live_bytes -= fut.nbytes
             jax.block_until_ready(carry)
             st.compute_s += time.perf_counter() - t0
         else:
@@ -352,7 +372,8 @@ class HostStreamExecutor:
                 if controller is not None:
                     distance = controller.observe(w)
                 t0 = time.perf_counter()
-                carry = self._step(carry, fut.group(), outs, st)
+                carry = self._step(i, carry, fut.group(), outs, st)
+                live_bytes -= fut.nbytes
                 st.compute_s += time.perf_counter() - t0
             t0 = time.perf_counter()
             jax.block_until_ready(carry)
@@ -366,9 +387,12 @@ class HostStreamExecutor:
         st.total_s = time.perf_counter() - t_start
         return (carry, outs) if self._writeback else (carry, None)
 
-    def _step(self, carry: Pytree, buf: Pytree, outs: Optional[list], st: StreamStats) -> Pytree:
+    def _step(self, index: int, carry: Pytree, buf: Pytree, outs: Optional[list], st: StreamStats) -> Pytree:
+        apply = (
+            (lambda c, b: self._apply(index, c, b)) if self._indexed else self._apply
+        )
         if self._writeback:
-            carry, group_out = self._apply(carry, buf)
+            carry, group_out = apply(carry, buf)
             st.bytes_d2h += _nbytes(group_out)
             st.n_transfers += 1
             if self._engine.config.async_writeback:
@@ -388,5 +412,5 @@ class HostStreamExecutor:
                 st.d2h_requests += n_leaves
                 outs.append(host_out)
         else:
-            carry = self._apply(carry, buf)
+            carry = apply(carry, buf)
         return carry

@@ -1,0 +1,431 @@
+"""Streamed model parameters: host/disk-homed weights under a device budget.
+
+The paper's flagship claim ("compute with data sets of arbitrarily large
+size", §3.1) applied to the largest pytree in the system — the model
+weights.  A :class:`WeightStreamPlan` partitions a uniform-scan model's
+parameter tree into **transfer groups**:
+
+  group 0         the *embed* group (token/audio embedding + vision merger)
+  groups 1..G     *layer groups*: contiguous slices ``[lo:hi)`` of the
+                  stacked ``blocks`` leaves (``layers_per_group`` layers,
+                  all leaves of those layers = ONE coalesced H2D request)
+  group G+1       the *head* group (final norm + LM head; tied/codebook
+                  heads re-read the embedding table, so their *fetch*
+                  group also references the embed home leaves)
+
+Between steps the weights live at their **home kind** — host numpy
+(``pinned_host``) or :class:`~repro.core.spillstore.SpillStore` memmap
+chunks (``disk_host``, one chunk per group = one disk request) — and
+stream group-wise through the :class:`~repro.core.engine.TransferEngine`
+while the previous group's compute runs:
+
+  forward    fetch order ``embed, L0, .., Ln, head``; the head stage also
+             computes the head/loss gradients (its params are in hand).
+  backward   **reverse** fetch order ``Ln, .., L0, embed`` — each group is
+             re-fetched and its vjp recomputes the group forward from the
+             saved boundary activation (activation checkpointing at group
+             granularity), so backward peak residency equals forward's.
+  optimizer  home order; each group streams ``{grads, moments}`` H2D and
+             its updated ``{params, moments}`` ride ONE pipelined D2H
+             drain back to the home kind (the params writeback shares the
+             drain with the streamed-AdamW moments).
+
+The plan is also the **device-budget model**: ``peak_device_bytes(d)`` is
+the sliding-window maximum of ``d + 2`` consecutive fetch-group byte
+counts (``d`` prefetched + 1 landing + 1 being consumed), and
+``max_distance_for_budget`` caps the adaptive prefetch window so the
+streamed residency can never exceed ``--device-budget-mb`` no matter what
+the controller learns.
+
+Where data lives never changes what is computed: every consumer runs the
+same jitted per-group programs on the same values for every kind, so
+streamed runs are bitwise-equal to the device-resident run (gated in
+``benchmarks/weight_stream.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = [
+    "WeightGroup",
+    "WeightStreamPlan",
+    "weight_stream_supported",
+    "PARAM_KINDS",
+]
+
+Pytree = Any
+
+#: the CLI surface of ``--param-kind``
+PARAM_KINDS = ("device", "pinned_host", "disk_host")
+
+#: spill-store key namespace for parameter group chunks
+_KEY_PREFIX = "wp"
+
+
+def weight_stream_supported(cfg) -> bool:
+    """True iff the arch's parameters can stream layer-group-wise: uniform
+    blocks executed as a scan over stacked ``(L, ...)`` leaves.  Hetero
+    (hybrid/ssm) stacks would need per-kind group programs — they keep the
+    device-resident path."""
+    return bool(cfg.uniform_blocks and cfg.use_scan)
+
+
+def _tree_bytes(tree: Pytree) -> int:
+    return sum(
+        int(np.prod(np.shape(x), dtype=np.int64))
+        * np.dtype(getattr(x, "dtype", np.float32)).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def _to_host(x):
+    """numpy view of a concrete leaf; tracers/ShapeDtypeStructs pass through
+    so ``jax.eval_shape`` templates (driver restore) survive homing."""
+    if isinstance(x, (jax.core.Tracer, jax.ShapeDtypeStruct)):
+        return x
+    return np.asarray(x)
+
+
+def _concrete(tree: Pytree) -> bool:
+    return all(
+        not isinstance(x, (jax.core.Tracer, jax.ShapeDtypeStruct))
+        for x in jax.tree.leaves(tree)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightGroup:
+    """One home group of the partition (a transfer group when fetched)."""
+
+    index: int
+    key: str  # pytree key in the home dict (sorted == home order)
+    kind: str  # "embed" | "layers" | "head"
+    lo: int = 0  # layer range for kind == "layers"
+    hi: int = 0
+
+
+class WeightStreamPlan:
+    """Partition of a model parameter tree into transfer groups.
+
+    Parameters
+    ----------
+    cfg:
+        the :class:`~repro.configs.base.ModelConfig` (must satisfy
+        :func:`weight_stream_supported`).
+    abstract_params:
+        ``jax.eval_shape`` tree of the *compute-dtype* params (what
+        ``repro.train.steps.abstract_params`` returns) — shapes/dtypes
+        drive the byte accounting and the group templates.
+    layers_per_group:
+        layers per stacked layer group.  ``None`` picks the largest count
+        whose distance-1 peak fits ``device_budget_mb`` (falling back to 1).
+    device_budget_mb:
+        device-residency budget for streamed weights.  Enforced two ways:
+        construction fails if even ``layers_per_group=1`` at distance 1
+        cannot fit, and :meth:`max_distance_for_budget` caps the prefetch
+        window at run time.  ``None`` = unbounded.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        abstract_params: Pytree,
+        *,
+        layers_per_group: Optional[int] = None,
+        device_budget_mb: Optional[float] = None,
+    ) -> None:
+        if not weight_stream_supported(cfg):
+            raise ValueError(
+                f"{cfg.name}: weight streaming requires uniform scanned "
+                "blocks (hybrid/ssm stacks keep the device-resident path)"
+            )
+        if "blocks" not in abstract_params:
+            raise ValueError("param tree has no 'blocks' subtree")
+        self.cfg = cfg
+        self.n_layers = cfg.n_layers
+        keys = set(abstract_params)
+        self.embed_keys = tuple(k for k in ("embed", "vision") if k in keys)
+        self.head_home_keys = tuple(k for k in ("ln_f", "head") if k in keys)
+        #: tied / codebook heads read the embedding table at the head stage
+        self.head_reads_embed = "head" not in keys or bool(cfg.n_codebooks)
+
+        blocks_abs = abstract_params["blocks"]
+        self._blocks_template = blocks_abs
+        total_block_bytes = _tree_bytes(blocks_abs)
+        self.per_layer_bytes = total_block_bytes // max(1, self.n_layers)
+        self.embed_bytes = _tree_bytes(
+            {k: abstract_params[k] for k in self.embed_keys}
+        )
+        head_home_bytes = _tree_bytes(
+            {k: abstract_params[k] for k in self.head_home_keys}
+        )
+        embed_table_bytes = (
+            _tree_bytes(abstract_params.get("embed", {}))
+            if self.head_reads_embed
+            else 0
+        )
+        self.head_fetch_bytes = head_home_bytes + embed_table_bytes
+        self.total_param_bytes = (
+            self.embed_bytes + head_home_bytes + total_block_bytes
+        )
+
+        budget = (
+            int(device_budget_mb * 1e6) if device_budget_mb is not None else None
+        )
+        self.device_budget_bytes = budget
+        if layers_per_group is None:
+            layers_per_group = self._fit_layers_per_group(budget)
+        if layers_per_group < 1:
+            raise ValueError("layers_per_group must be >= 1")
+        self.layers_per_group = min(layers_per_group, self.n_layers)
+
+        groups: list[WeightGroup] = []
+        groups.append(WeightGroup(0, "g000_embed", "embed"))
+        lo = 0
+        while lo < self.n_layers:
+            hi = min(lo + self.layers_per_group, self.n_layers)
+            i = len(groups)
+            groups.append(
+                WeightGroup(i, f"g{i:03d}_layers_{lo:03d}_{hi:03d}", "layers", lo, hi)
+            )
+            lo = hi
+        groups.append(WeightGroup(len(groups), f"g{len(groups):03d}_head", "head"))
+        self.groups = tuple(groups)
+        self.layer_groups = tuple(g for g in groups if g.kind == "layers")
+        self.n_groups = len(groups)
+
+        if budget is not None and self.peak_device_bytes(1) > budget:
+            raise ValueError(
+                f"--device-budget-mb {device_budget_mb} cannot hold even a "
+                f"distance-1 weight stream (peak "
+                f"{self.peak_device_bytes(1) / 1e6:.1f} MB with "
+                f"layers_per_group={self.layers_per_group}); raise the budget"
+            )
+
+    # ------------------------------------------------------------ byte model
+    @staticmethod
+    def _window_peak(
+        embed_bytes: int,
+        head_fetch_bytes: int,
+        per_layer_bytes: int,
+        n_layers: int,
+        lpg: int,
+        distance: int,
+    ) -> int:
+        """Sliding-window residency peak for a hypothetical ``lpg`` —
+        shared by :meth:`peak_device_bytes` and the auto group-sizing so
+        the fit can never pick a group size the validation then rejects."""
+        seq = [embed_bytes]
+        lo = 0
+        while lo < n_layers:
+            hi = min(lo + lpg, n_layers)
+            seq.append((hi - lo) * per_layer_bytes)
+            lo = hi
+        seq.append(head_fetch_bytes)
+        w = max(1, distance + 2)
+        return max(sum(seq[i : min(i + w, len(seq))]) for i in range(len(seq)))
+
+    def group_bytes(self, g: WeightGroup, *, fetch: bool = True) -> int:
+        if g.kind == "embed":
+            return self.embed_bytes
+        if g.kind == "head":
+            return self.head_fetch_bytes if fetch else (
+                self.head_fetch_bytes
+                - (self.embed_bytes if self.head_reads_embed else 0)
+            )
+        return (g.hi - g.lo) * self.per_layer_bytes
+
+    def fetch_sequence_bytes(self) -> list[int]:
+        """Per-group H2D bytes in forward fetch order."""
+        return [self.group_bytes(g) for g in self.groups]
+
+    def peak_device_bytes(self, distance: int) -> int:
+        """Streamed-weight residency model: with ``distance`` groups
+        prefetched, at most ``distance + 2`` consecutive fetch groups are
+        device-resident at once (in flight + landing + being consumed).
+        The backward pass walks the same sequence reversed, so the same
+        sliding-window maximum bounds both passes."""
+        seq = self.fetch_sequence_bytes()
+        w = max(1, distance + 2)
+        return max(
+            sum(seq[i : min(i + w, len(seq))]) for i in range(len(seq))
+        )
+
+    def _peak_for_lpg(self, lpg: int, distance: int) -> int:
+        return self._window_peak(
+            self.embed_bytes,
+            self.head_fetch_bytes,
+            self.per_layer_bytes,
+            self.n_layers,
+            lpg,
+            distance,
+        )
+
+    def max_distance_for_budget(self, cap: int = 8) -> int:
+        """Largest prefetch distance whose modeled peak fits the budget —
+        the engine's ``max_distance`` so the adaptive controller can never
+        learn its way past the budget."""
+        if self.device_budget_bytes is None:
+            return cap
+        d = 1
+        while d < cap and self.peak_device_bytes(d + 1) <= self.device_budget_bytes:
+            d += 1
+        return d
+
+    def _fit_layers_per_group(self, budget: Optional[int]) -> int:
+        if budget is None:
+            return max(1, self.n_layers // 4)
+        for lpg in range(self.n_layers, 1, -1):
+            # the EXACT distance-1 sliding-window peak (not a per-group
+            # approximation — a window holds up to 3 consecutive groups)
+            if self._peak_for_lpg(lpg, 1) <= budget:
+                return lpg
+        return 1
+
+    # ------------------------------------------------------------- slicing
+    def home_group(self, params: Pytree, g: WeightGroup) -> Pytree:
+        """The group's slice of a *full* param tree (views, no copies)."""
+        if g.kind == "embed":
+            return {k: params[k] for k in self.embed_keys}
+        if g.kind == "head":
+            return {k: params[k] for k in self.head_home_keys}
+        return jax.tree.map(lambda a: a[g.lo : g.hi], params["blocks"])
+
+    def init_home(self, params: Pytree) -> dict:
+        """Home representation: ``{"groups": {key: group_tree}}`` with
+        host-numpy leaves (a plain pytree — checkpointable as-is).
+        Abstract leaves pass through for ``eval_shape`` templates."""
+        return {
+            "groups": {
+                g.key: jax.tree.map(_to_host, self.home_group(params, g))
+                for g in self.groups
+            }
+        }
+
+    def assemble(self, home: dict) -> Pytree:
+        """Full host param tree from a home (layer groups concatenated) —
+        for conversion/export; the streamed paths never call this."""
+        out: dict = {}
+        for g in self.groups:
+            if g.kind == "layers":
+                continue
+            out.update({k: v for k, v in home["groups"][g.key].items()})
+        parts = [home["groups"][g.key] for g in self.layer_groups]
+        out["blocks"] = jax.tree.map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0), *parts
+        )
+        return out
+
+    # ------------------------------------------------------------- fetching
+    def fetch_group(self, home: dict, g: WeightGroup) -> Pytree:
+        """The pytree actually streamed for a stage.  Identical to the home
+        group except the head stage of tied/codebook archs, whose fetch
+        group additionally references the embed home leaves (coalesced into
+        the same staging buffer — still ONE H2D request per device)."""
+        tree = home["groups"][g.key]
+        if g.kind == "head" and self.head_reads_embed:
+            tree = dict(tree)
+            tree["embed"] = home["groups"][self.groups[0].key]["embed"]
+        return tree
+
+    def fetch_groups_forward(self, home: dict) -> list:
+        return [self.fetch_group(home, g) for g in self.groups]
+
+    def split_head_grads(self, dp_head: Pytree) -> tuple[Pytree, Optional[Pytree]]:
+        """Split the head *fetch* group's grads into (head-home part, embed
+        table part or None) — tied archs sum the embed part into the embed
+        stage's gradient."""
+        home = {k: dp_head[k] for k in self.head_home_keys}
+        embed = dp_head.get("embed") if self.head_reads_embed else None
+        return home, embed
+
+    # ------------------------------------------------------------ shardings
+    def group_shardings(self, p_shardings: Optional[Pytree]):
+        """Per-fetch-group sharding trees from a full-params sharding tree
+        (slicing a stacked leaf keeps its rank, so the blocks leaf sharding
+        applies to every layer-group slice unchanged)."""
+        if p_shardings is None:
+            return None
+        out = []
+        for g in self.groups:
+            if g.kind == "embed":
+                out.append({k: p_shardings[k] for k in self.embed_keys})
+            elif g.kind == "head":
+                tree = {k: p_shardings[k] for k in self.head_home_keys}
+                if self.head_reads_embed:
+                    tree = dict(tree)
+                    tree["embed"] = p_shardings["embed"]
+                out.append(tree)
+            else:
+                out.append(p_shardings["blocks"])
+        return out
+
+    def home_group_shardings(self, p_shardings: Optional[Pytree]):
+        """Home-order sharding trees (no tied-embed aliasing) — the layout
+        the optimizer phase stages grads/moments at."""
+        if p_shardings is None:
+            return None
+        out = []
+        for g in self.groups:
+            if g.kind == "embed":
+                out.append({k: p_shardings[k] for k in self.embed_keys})
+            elif g.kind == "head":
+                out.append({k: p_shardings[k] for k in self.head_home_keys})
+            else:
+                out.append(p_shardings["blocks"])
+        return out
+
+    # ------------------------------------------------------------- spilling
+    def spill_key(self, g: WeightGroup) -> str:
+        return f"{_KEY_PREFIX}/{g.key}"
+
+    def spill_home(self, home: dict, store) -> dict:
+        """Re-home every group at the ``DiskHost`` tier: one spill-store
+        chunk per group (= one disk request per fetch), leaves replaced by
+        memmap views.  Abstract templates pass through; groups already
+        disk-resident are not rewritten."""
+        from repro.core.spillstore import is_disk_leaf
+
+        groups = {}
+        for g in self.groups:
+            tree = home["groups"][g.key]
+            if not _concrete(tree):
+                return home
+            if all(is_disk_leaf(v) for v in jax.tree.leaves(tree)):
+                groups[g.key] = tree
+                continue
+            store.put(self.spill_key(g), tree)
+            groups[g.key] = store.get(self.spill_key(g))
+        return {"groups": groups}
+
+    def is_spilled(self, home: dict) -> bool:
+        from repro.core.spillstore import is_disk_leaf
+
+        return any(
+            is_disk_leaf(v)
+            for v in jax.tree.leaves(home["groups"])
+        )
+
+    def device_home(self, home: dict, p_shardings: Optional[Pytree] = None) -> dict:
+        """Place every home group on device (the ``param_kind=device``
+        baseline: fetch groups pass through the engine by reference)."""
+        shardings = self.home_group_shardings(p_shardings)
+        groups = {}
+        for i, g in enumerate(self.groups):
+            tree = home["groups"][g.key]
+            if shardings is None:
+                groups[g.key] = jax.device_put(tree)
+            else:
+                groups[g.key] = jax.device_put(tree, shardings[i])
+        return {"groups": groups}
+
+    def __repr__(self) -> str:  # pragma: no cover - trivial
+        return (
+            f"WeightStreamPlan({self.cfg.name}, n_groups={self.n_groups}, "
+            f"layers_per_group={self.layers_per_group}, "
+            f"total={self.total_param_bytes / 1e6:.1f}MB)"
+        )

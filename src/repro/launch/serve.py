@@ -26,6 +26,7 @@ import argparse
 import dataclasses
 import time
 from collections import deque
+from pathlib import Path
 from typing import Optional
 
 import jax
@@ -124,12 +125,19 @@ class ServeSession:
         engine: Optional[TransferEngine] = None,
         spill_dir: Optional[str] = None,
         stats: Optional[StreamStats] = None,
+        param_kind: str = "device",
+        device_budget_mb: Optional[float] = None,
+        param_layers_per_group: Optional[int] = None,
+        param_distance=AUTO,
     ) -> None:
         self.cfg = cfg
         self.mesh = mesh
         self.slots = slots
         self.stats = stats if stats is not None else StreamStats()
         self.stats.mode = "paged"
+        #: transfer accounting of the *weight* stream (separate from the KV
+        #: page stream so each tier's request model stays checkable)
+        self.param_stats = StreamStats()
         self._kind = mk.as_kind(kv_kind)
         # validate — and do every fallible init — before allocating the
         # engine thread / spill dir: a failed constructor must not leak
@@ -147,44 +155,161 @@ class ServeSession:
                 f"{cfg.name}: cache tree is not pageable (ring/recurrent "
                 "state) — use the unpaged serve path (kv_page_len=0)"
             )
+        # streamed weights: plan before any resource allocation (plan
+        # construction validates the budget and can raise)
+        self._wplan = None
+        engine_cfg = None
+        if param_kind != "device":
+            from repro.core.engine import EngineConfig
+            from repro.core.weightstream import PARAM_KINDS, WeightStreamPlan
+
+            if param_kind not in PARAM_KINDS:
+                raise ValueError(
+                    f"unknown param_kind {param_kind!r}; expected one of "
+                    f"{PARAM_KINDS}"
+                )
+            budget = device_budget_mb
+            if budget is not None:
+                # the device budget is shared: the pager's hot window (the
+                # current page + hot_pages full pages + the shared zero
+                # page, per slot) takes its cut first, weights stream under
+                # the remainder
+                page_nbytes = sum(
+                    int(np.prod(s.shape)) * s.dtype.itemsize
+                    for s in jax.tree.leaves(page_template(template, page_len))
+                )
+                hot_mb = slots * (hot_pages + 2) * page_nbytes / 1e6
+                budget = budget - hot_mb
+                if budget <= 0:
+                    raise ValueError(
+                        f"device_budget_mb={device_budget_mb} is consumed by "
+                        f"the KV hot window ({hot_mb:.1f} MB); raise the "
+                        "budget or shrink hot_pages/page_len"
+                    )
+            self._wplan = WeightStreamPlan(
+                cfg,
+                st.abstract_params(cfg),
+                layers_per_group=param_layers_per_group,
+                device_budget_mb=budget,
+            )
+            engine_cfg = EngineConfig(
+                max_distance=self._wplan.max_distance_for_budget()
+            )
+            if engine is not None and (
+                budget is not None
+                and engine.config.max_distance
+                > self._wplan.max_distance_for_budget()
+            ):
+                # an external engine must respect the budget's window cap or
+                # the adaptive controller can stream past the budget
+                raise ValueError(
+                    f"external engine's max_distance="
+                    f"{engine.config.max_distance} exceeds the device "
+                    f"budget's cap {self._wplan.max_distance_for_budget()}; "
+                    "pass an engine configured from the plan (or no engine)"
+                )
         self.plan = sh.make_plan(mesh, mode="serve")
         key = jax.random.PRNGKey(seed)
-        self.params = st.init_train_state(key, cfg)[0]
-        self.sharder = sh.make_sharder(self.plan, self.params, slots)
-
-        self._engine = engine or TransferEngine()
-        self._owns_engine = engine is None
-        self._store = None
-        if self._kind == mk.DISK_HOST:
-            ephemeral = spill_dir is None
-            if ephemeral:
+        if self._wplan is not None:
+            # group-wise init: the full param tree is never device-resident
+            # (the point of streaming arbitrarily large models); homes are
+            # built BEFORE the engine thread exists so a failed spill
+            # cannot leak a worker
+            self.sharder = sh.make_sharder(
+                self.plan, st.abstract_params(cfg), slots
+            )
+            home = st.init_weight_streamed_params(key, cfg, self._wplan)
+            self._param_store = None
+            if param_kind == "disk_host":
                 import tempfile
 
-                spill_dir = tempfile.mkdtemp(prefix="repro-serve-kv-")
-            self._store = SpillStore(spill_dir, ephemeral=ephemeral)
+                pd = (
+                    str(Path(spill_dir) / "params")
+                    if spill_dir is not None and self._kind == mk.DISK_HOST
+                    else tempfile.mkdtemp(prefix="repro-serve-wp-")
+                )
+                self._param_store = SpillStore(pd, ephemeral=True)
+                try:
+                    home = self._wplan.spill_home(home, self._param_store)
+                except BaseException:
+                    # no-leak contract: a failed spill (full disk) must not
+                    # orphan the ephemeral chunk directory
+                    self._param_store.close()
+                    raise
+            self.params = home
+        else:
+            self.params = st.init_train_state(key, cfg)[0]
+            self.sharder = sh.make_sharder(self.plan, self.params, slots)
+            self._param_store = None
 
-        # cold pages stage at the serve plan's cache specs (derived on the
-        # *page* shape so divisibility fallbacks see what actually moves):
-        # under --model-parallel a fetched page group costs one coalesced
-        # H2D request per device, not one per leaf
-        page_specs = sh.cache_specs_tree(
-            self.plan, page_template(template, page_len), 1
-        )
-        self.pager = KVPager(
-            template,
-            pager_cfg,
-            slots=slots,
-            engine=self._engine,
-            store=self._store,
-            device_shardings=sh.named_shardings(mesh, page_specs),
-        )
-        self._prefill = jax.jit(
-            st.make_prefill_step(cfg, 1, self.max_len, mesh, self.sharder)
-        )
-        self._step = st.make_paged_decode_step(cfg, mesh, self.sharder)
-        self._argmax = jax.jit(
-            lambda logits: jnp.argmax(logits[..., -1, :], axis=-1).astype(jnp.int32)
-        )
+        self._engine = engine or TransferEngine(engine_cfg)
+        self._owns_engine = engine is None
+        self._store = None
+        try:
+            if self._kind == mk.DISK_HOST:
+                ephemeral = spill_dir is None
+                if ephemeral:
+                    import tempfile
+
+                    spill_dir = tempfile.mkdtemp(prefix="repro-serve-kv-")
+                self._store = SpillStore(spill_dir, ephemeral=ephemeral)
+
+            # cold pages stage at the serve plan's cache specs (derived on
+            # the *page* shape so divisibility fallbacks see what actually
+            # moves): under --model-parallel a fetched page group costs one
+            # coalesced H2D request per device, not one per leaf
+            page_specs = sh.cache_specs_tree(
+                self.plan, page_template(template, page_len), 1
+            )
+            self.pager = KVPager(
+                template,
+                pager_cfg,
+                slots=slots,
+                engine=self._engine,
+                store=self._store,
+                device_shardings=sh.named_shardings(mesh, page_specs),
+            )
+            if self._wplan is not None:
+                # stream the homed weights per prefill / decode step; the
+                # decode executables consume the groups by reference, so
+                # where the weights live never changes the tokens
+                p_sh = None
+                if mesh.devices.size > 1:
+                    p_specs = sh.param_specs(self.plan, st.abstract_params(cfg))
+                    p_sh = sh.named_shardings(mesh, p_specs)
+                from repro.core.refspec import PrefetchSpec
+
+                w_dist = (
+                    param_distance if param_distance == AUTO else int(param_distance)
+                )
+                param_pf = PrefetchSpec(
+                    buffer_size=self._wplan.n_groups + 2, distance=w_dist
+                )
+                self._prefill = st.make_weight_streamed_prefill_step(
+                    cfg, self._wplan, 1, self.max_len, mesh, self.sharder,
+                    engine=self._engine, stats=self.param_stats,
+                    param_shardings=p_sh, prefetch=param_pf,
+                )
+                self._step = st.make_weight_streamed_decode_step(
+                    cfg, self._wplan, mesh, self.sharder,
+                    engine=self._engine, stats=self.param_stats,
+                    param_shardings=p_sh, paged=True, prefetch=param_pf,
+                )
+            else:
+                self._prefill = jax.jit(
+                    st.make_prefill_step(cfg, 1, self.max_len, mesh, self.sharder)
+                )
+                self._step = st.make_paged_decode_step(cfg, mesh, self.sharder)
+            self._argmax = jax.jit(
+                lambda logits: jnp.argmax(logits[..., -1, :], axis=-1).astype(
+                    jnp.int32
+                )
+            )
+        except BaseException:
+            # the constructor's no-leak contract: anything that fails after
+            # the engine thread / spill dirs exist tears them down
+            self.close()
+            raise
 
         self.requests: dict[int, Request] = {}
         self.queue: "deque[int]" = deque()
@@ -348,6 +473,8 @@ class ServeSession:
             self._engine.close()
         if self._store is not None:
             self._store.close()
+        if self._param_store is not None:
+            self._param_store.close()
 
     def __enter__(self) -> "ServeSession":
         return self
@@ -535,6 +662,10 @@ def serve(
     engine: Optional[TransferEngine] = None,
     spill_dir: Optional[str] = None,
     warmup: bool = True,
+    param_kind: str = "device",
+    device_budget_mb: Optional[float] = None,
+    param_layers_per_group: Optional[int] = None,
+    param_distance=AUTO,
 ):
     """Serve ``n_requests`` greedy-decode requests (default: one per batch
     slot) of ``prompt_len`` prompt tokens and ``gen`` generated tokens.
@@ -542,12 +673,18 @@ def serve(
     ``kv_page_len > 0`` routes decode through the paged
     :class:`ServeSession`; ``kv_page_len=0`` runs the unpaged reference
     schedule (synchronous whole-cache placement per step for host kinds).
+    ``param_kind`` homes the *weights* off-device and streams them
+    layer-group-wise per prefill/decode step (paged sessions only).
     Returns timing, per-request generated tokens (``(n_requests, gen)``),
     the :class:`StreamStats` row, and pager residency accounting.
     """
     stats = StreamStats()
     n_requests = n_requests or batch
     if kv_page_len <= 0:
+        if param_kind != "device":
+            raise ValueError(
+                "streamed params require the paged session (kv_page_len > 0)"
+            )
         if n_requests != batch:
             raise ValueError("the unpaged path serves exactly one request per slot")
         return _serve_unpaged(
@@ -581,6 +718,10 @@ def serve(
         engine=engine,
         spill_dir=spill_dir,
         stats=stats,
+        param_kind=param_kind,
+        device_budget_mb=device_budget_mb,
+        param_layers_per_group=param_layers_per_group,
+        param_distance=param_distance,
     ) as session:
         rids = [session.submit(prompts[i], gen) for i in range(n_requests)]
         if warmup:
@@ -613,6 +754,8 @@ def serve(
             "demoted_groups": session.pager.demoted_groups,
             "peak_resident_bytes": session.pager.peak_resident_bytes,
             "total_cache_bytes": session.pager.total_cache_bytes(),
+            "param_stats": session.param_stats,
+            "param_plan": session._wplan,
         }
         return res
 
@@ -635,6 +778,14 @@ def main() -> int:
                     help="page prefetch window: an int or 'auto'")
     ap.add_argument("--spill-dir", default=None,
                     help="disk_host page store directory (default: ephemeral)")
+    from repro.core.weightstream import PARAM_KINDS
+
+    ap.add_argument("--param-kind", default="device", choices=PARAM_KINDS,
+                    help="home tier of the model weights (host/disk kinds "
+                    "stream them layer-group-wise per prefill/decode step)")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="device budget shared by the KV hot window and the "
+                    "streamed weight window")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -655,6 +806,8 @@ def main() -> int:
         distance=distance,
         seed=args.seed,
         spill_dir=args.spill_dir,
+        param_kind=args.param_kind,
+        device_budget_mb=args.device_budget_mb,
     )
     stats = res["stats"]
     print(
@@ -676,6 +829,16 @@ def main() -> int:
             f"of {res['total_cache_bytes']} B total cache "
             f"({res['demoted_groups']} demotions, "
             f"{res['stale_drops']} stale prefetches)"
+        )
+    if res.get("param_plan") is not None:
+        ps = res["param_stats"]
+        plan = res["param_plan"]
+        print(
+            f"weights: {plan.n_groups} groups x {plan.layers_per_group} "
+            f"layers, {ps.h2d_requests} H2D req "
+            f"({ps.per_tier()['h2d']['requests_per_device_group']:.2f}/"
+            f"(device,group)), peak streamed {ps.peak_inflight_bytes} B "
+            f"of {plan.total_param_bytes} B total params"
         )
     return 0
 

@@ -47,6 +47,9 @@ def build_trainer(
     opt_stream_groups: int = 4,
     spill_dir=None,
     host_budget_mb=None,
+    param_kind: str = "device",
+    device_budget_mb=None,
+    param_layers_per_group=None,
 ):
     """Assemble (driver, jitted step) for a config on a mesh.
 
@@ -68,6 +71,15 @@ def build_trainer(
     :class:`~repro.core.spillstore.SpillStore` and stream through the
     engine's two-stage disk->host->device pipeline — optimizer state
     larger than host RAM, same update values.
+
+    ``param_kind`` (``--param-kind``) extends the hierarchy to the model
+    **weights**: ``pinned_host``/``disk_host`` home the params (and their
+    AdamW moments) off-device and stream them layer-group-wise through the
+    engine for the forward pass, the reverse-order backward pass, and the
+    optimizer update (see ``repro.core.weightstream``), with
+    ``device_budget_mb`` bounding peak streamed device residency — models
+    of arbitrarily large size under an explicit device budget.  This path
+    subsumes ``--stream-opt`` (the moments ride the same groups).
     """
     from repro.core import memkind as mk
     from repro.core import spillstore as st_mod
@@ -126,6 +138,90 @@ def build_trainer(
         return {"params": params, "opt": opt}, metrics
 
     log = logging.getLogger("repro.train")
+    if param_kind != "device":
+        from repro.core.engine import EngineConfig
+        from repro.core.weightstream import PARAM_KINDS, WeightStreamPlan
+
+        if param_kind not in PARAM_KINDS:
+            raise ValueError(
+                f"unknown --param-kind {param_kind!r}; expected one of {PARAM_KINDS}"
+            )
+        if stream_opt:
+            log.warning(
+                "--stream-opt is subsumed by --param-kind %s: the AdamW "
+                "moments are homed with the params and stream through the "
+                "same groups",
+                param_kind,
+            )
+        plan = WeightStreamPlan(
+            cfg,
+            st.abstract_params(cfg),
+            layers_per_group=param_layers_per_group,
+            device_budget_mb=device_budget_mb,
+        )
+        log.info(
+            "weight streaming: %d groups (%d layers/group), total %.1f MB, "
+            "peak(d=1) %.1f MB, max distance %d",
+            plan.n_groups,
+            plan.layers_per_group,
+            plan.total_param_bytes / 1e6,
+            plan.peak_device_bytes(1) / 1e6,
+            plan.max_distance_for_budget(),
+        )
+        engine = TransferEngine(
+            EngineConfig(max_distance=plan.max_distance_for_budget())
+        )
+        param_stats = StreamStats()
+        param_store = None
+        if param_kind == "disk_host":
+            ephemeral = spill_dir is None
+            if ephemeral:
+                import tempfile
+
+                spill_dir = tempfile.mkdtemp(prefix="repro-spill-wp-")
+            param_store = SpillStore(spill_dir, ephemeral=ephemeral)
+        streamed = st.make_weight_streamed_train_step(
+            cfg,
+            opt_cfg,
+            mesh,
+            sharder,
+            plan=plan,
+            engine=engine,
+            stats=param_stats,
+            spill_store=param_store,
+            # groups stage at the sharding plan's param specs under a mesh
+            param_shardings=p_sh if mesh.devices.size > 1 else None,
+            param_kind=param_kind,
+        )
+
+        def init_state_ws():
+            state = st.init_weight_streamed_state(
+                jax.random.PRNGKey(seed), cfg, plan
+            )
+            if param_store is not None:
+                state = st.spill_weight_streamed_state(plan, state, param_store)
+            return state
+
+        def wrapped_step_ws(state, batch):
+            if param_store is not None and not plan.is_spilled(state["params"]):
+                # checkpoint restore hands back plain host arrays — the
+                # disk home must be re-imposed or the weights sit in RAM
+                state = st.spill_weight_streamed_state(plan, state, param_store)
+            with mesh:
+                return streamed(state, batch)
+
+        driver = TrainDriver(
+            driver_cfg,
+            wrapped_step_ws,
+            loader,
+            init_state_ws,
+            fail_at=fail_at,
+            engine=engine,
+            stream_stats=param_stats,
+            spill_store=param_store,
+        )
+        return driver
+
     if stream_opt and policy.opt_state.jax_kind == "device":
         log.warning(
             "--stream-opt ignored: policy %r keeps optimizer state on "
@@ -284,6 +380,32 @@ def main() -> int:
         "beyond it spill to the DiskHost tier (0/unset with a disk "
         "policy: spill everything)",
     )
+    from repro.core.weightstream import PARAM_KINDS
+
+    ap.add_argument(
+        "--param-kind",
+        default="device",
+        choices=PARAM_KINDS,
+        help="home tier of the model weights: host/disk kinds stream the "
+        "params (and their AdamW moments) layer-group-wise through the "
+        "transfer engine for forward, reverse-order backward, and the "
+        "optimizer update",
+    )
+    ap.add_argument(
+        "--device-budget-mb",
+        type=float,
+        default=None,
+        help="device-residency budget for streamed weights: picks the "
+        "layer-group size and caps the prefetch window so streamed "
+        "params never exceed it",
+    )
+    ap.add_argument(
+        "--param-layers-per-group",
+        type=int,
+        default=None,
+        help="layers per weight transfer group (default: largest count "
+        "fitting --device-budget-mb, else n_layers/4)",
+    )
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(levelname)s %(message)s")
@@ -311,6 +433,9 @@ def main() -> int:
         stream_opt=args.stream_opt,
         spill_dir=args.spill_dir,
         host_budget_mb=args.host_budget_mb,
+        param_kind=args.param_kind,
+        device_budget_mb=args.device_budget_mb,
+        param_layers_per_group=args.param_layers_per_group,
     )
     t0 = time.time()
     driver.run()

@@ -107,6 +107,38 @@ def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
     return params
 
 
+def init_model_shell(key: jax.Array, cfg: ModelConfig) -> Params:
+    """The non-``blocks`` leaves of :func:`init_model` (embed / vision /
+    head / ln_f), bitwise-identical (same key folding), without touching
+    any layer.  One piece of the weight-streamed group-wise init: huge
+    models must initialize one transfer group at a time, never whole."""
+    ke, kl, kh, kv = jax.random.split(key, 4)
+    params: Params = {}
+    if cfg.n_codebooks:
+        params["embed"] = frontends.init_audio_embed(ke, cfg)
+    else:
+        params["embed"] = layers.init_embed(ke, cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["head"] = layers.init_head(kh, cfg.d_model, cfg.vocab_size)
+    if cfg.vision_embed:
+        params["vision"] = frontends.init_vision_merger(kv, cfg)
+    params["ln_f"] = layers.init_norm(kh, cfg.d_model, cfg.norm_type)
+    return params
+
+
+def init_model_slice(key: jax.Array, cfg: ModelConfig, lo: int, hi: int) -> Params:
+    """The stacked-blocks slice ``[lo:hi)`` of :func:`init_model`'s
+    ``params["blocks"]``, bitwise-identical (each layer drawn from the same
+    per-layer key), materializing only those layers.  Uniform scanned
+    stacks only — the shape weight streaming supports."""
+    if not (cfg.uniform_blocks and cfg.use_scan):
+        raise ValueError("init_model_slice requires uniform scanned blocks")
+    _, kl, _, _ = jax.random.split(key, 4)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    blocks = [_init_block(lkeys[i], cfg, "attn") for i in range(lo, hi)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
 def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, cl: int, dtype) -> Params:
     if kind == "attn":
         w = cfg.window if cfg.family == "hybrid" else cl
@@ -550,6 +582,162 @@ def decode_step(
                 x = sharder.acts(x)
             new_caches[name] = st
     return _head(cfg, params, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# layer-group stages (streamed parameters — see repro.core.weightstream)
+#
+# The monolithic forward/prefill/decode above consume the whole param tree;
+# these stages consume ONE transfer group at a time so host/disk-homed
+# weights can arrive by reference mid-stack: the embed group starts the
+# residual stream, each stacked layer-group slice continues it with the
+# exact scan body the monolithic path uses, and the head group finishes it.
+# Chaining the stages is value-identical to the single scan (same per-layer
+# ops in the same order), and identical *programs* across memory kinds is
+# what makes streamed == device-resident bitwise.
+# ---------------------------------------------------------------------------
+
+
+def embed_stage(cfg: ModelConfig, group: Params, batch: dict, pos=None, sharder=None):
+    """Embed-group forward: ``group`` holds the plan's embed leaves
+    (``{"embed": ..., "vision"?: ...}``).  Returns the first hidden states;
+    RoPE angles are derived separately (:func:`stage_angles`) because the
+    vision prefix changes the sequence length the angles must cover."""
+    x = _embed(cfg, group, batch, pos=pos)
+    if sharder is not None:
+        x = sharder.acts(x)
+    return x
+
+
+def stage_angles(cfg: ModelConfig, batch: dict, seq_len: int, pos=None):
+    """RoPE/mRoPE angles for the staged passes (``None`` for pos types the
+    blocks do not consume)."""
+    if cfg.pos_type == "mrope" and pos is not None:
+        return _angles(cfg, batch, 1)
+    return _angles(cfg, batch, seq_len, pos=pos)
+
+
+def block_group_train(
+    cfg: ModelConfig, blocks_slice: Params, x, aux, angles, mesh=None, sharder=None
+):
+    """Forward over one stacked layer-group slice ``(Lg, ...)`` — the same
+    (remat'd) scan body as :func:`forward_hidden`, entered mid-stack.
+    ``aux`` is the running MoE aux-loss carry.  Returns ``(x, aux)``."""
+
+    def body(carry, p):
+        x, a = carry
+        x, da = _block_train(cfg, p, x, angles, mesh, sharder)
+        return (x, a + da), None
+
+    wrapped = _remat(cfg, body)
+    (x, aux), _ = jax.lax.scan(wrapped, (x, aux), blocks_slice)
+    return x, aux
+
+
+def block_group_prefill(
+    cfg: ModelConfig, blocks_slice: Params, cache_slice: Params, x, angles, sharder=None
+):
+    """Prefill over one layer-group slice: fills the group's stacked cache
+    slice.  Returns ``(x, new_cache_slice)``."""
+
+    def body(x, pc):
+        p, cache = pc
+        if sharder is not None:
+            p = sharder.block(p)
+        h = layers.norm_apply(p["ln1"], x, cfg.norm_type)
+        h, new_cache = attention.attention_prefill(cfg, p["attn"], h, angles, cache)
+        x = x + h
+        h = layers.norm_apply(p["ln2"], x, cfg.norm_type)
+        if "moe" in p:
+            h, _ = moe.moe_dispatch(cfg, p["moe"], h)
+        elif "mlp" in p:
+            h = layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
+        else:
+            h = jnp.zeros_like(h)
+        x = x + h
+        if sharder is not None:
+            x = sharder.acts(x)
+        return x, new_cache
+
+    return jax.lax.scan(body, x, (blocks_slice, cache_slice))
+
+
+def block_group_decode(
+    cfg: ModelConfig, blocks_slice: Params, cache_slice: Params, x, angles, pos, sharder=None
+):
+    """One decode step over one layer-group slice.  Returns
+    ``(x, new_cache_slice)`` — the same per-layer body as
+    :func:`decode_step`'s uniform branch."""
+
+    def body(x, pc):
+        p, cache = pc
+        if sharder is not None:
+            p = sharder.block(p)
+        x, nc = _block_decode(cfg, "attn", p, x, angles, cache, pos)
+        if sharder is not None:
+            x = sharder.acts(x)
+        return x, nc
+
+    return jax.lax.scan(body, x, (blocks_slice, cache_slice))
+
+
+def head_stage_logits(cfg: ModelConfig, group: Params, x) -> jax.Array:
+    """Head-group logits from trunk hidden states.  ``group`` holds
+    ``ln_f`` + the head weights (tied/codebook archs: the embed table —
+    the plan's head *fetch* group carries it)."""
+    return _head(cfg, group, x)
+
+
+def head_stage_loss(
+    cfg: ModelConfig, group: Params, x, aux, batch: dict
+) -> tuple[jax.Array, dict]:
+    """Head-group loss from precomputed trunk hidden states: the same
+    (optionally seq-chunked) CE as :func:`lm_loss`, with the accumulated
+    MoE ``aux`` carried in from the layer-group stages."""
+    targets = batch["targets"]
+    if cfg.vision_embed and "vision_embeds" in batch:
+        s_img = batch["vision_embeds"].shape[1]
+        pad = jnp.full(targets.shape[:1] + (s_img,), IGNORE_INDEX, targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+
+    s = targets.shape[-1]
+    c = cfg.loss_chunk
+    if not c or s <= c or s % c != 0:
+        logits = _head(cfg, group, x)
+        ce, n = cross_entropy(logits, targets)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux, "n_tokens": n}
+
+    nb = s // c
+    xs = jnp.moveaxis(x.reshape(x.shape[0], nb, c, x.shape[-1]), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(*targets.shape[:-1], nb, c), -2, 0)
+
+    @jax.checkpoint
+    def chunk(xc, tc):
+        logits = _head(cfg, group, xc)
+        return cross_entropy_sum(logits, tc)
+
+    def body(carry, args):
+        tot, n = carry
+        nll, nv = chunk(*args)
+        return (tot + nll, n + nv), None
+
+    (tot, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xs, ts)
+    )
+    n = jnp.maximum(n, 1)
+    ce = tot / n
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "n_tokens": n}
+
+
+def init_cache_group(
+    cfg: ModelConfig, n_layers: int, batch: int, seq_len: int, dtype=jnp.bfloat16
+) -> Params:
+    """Stacked decode-cache slice for ``n_layers`` uniform attention layers
+    (the per-group analogue of :func:`init_caches`)."""
+    cl = cfg.cache_len(seq_len)
+    return _stack_tree(n_layers, attention.init_cache(cfg, batch, cl, dtype))
 
 
 # ---------------------------------------------------------------------------

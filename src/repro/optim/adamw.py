@@ -67,6 +67,16 @@ def adamw_globals(cfg: AdamWConfig, grads: Pytree, step) -> dict:
     :func:`adamw_leaf_update` group-wise while the moments stream through
     the transfer engine) computes the *identical* numbers once up front.
     """
+    return adamw_globals_from_norm(cfg, global_norm(grads), step)
+
+
+def adamw_globals_from_norm(cfg: AdamWConfig, grad_norm, step) -> dict:
+    """:func:`adamw_globals` with the global gradient norm already reduced.
+
+    The weight-streamed trainer accumulates per-leaf squared sums while the
+    gradients stream back to the host during the backward pass, so the full
+    gradient tree never co-resides anywhere to hand to :func:`global_norm`.
+    """
     from repro.optim.schedule import cosine_schedule
 
     step = jnp.asarray(step)
@@ -77,7 +87,7 @@ def adamw_globals(cfg: AdamWConfig, grads: Pytree, step) -> dict:
         total_steps=cfg.total_steps,
         min_ratio=cfg.min_lr_ratio,
     )
-    gnorm = global_norm(grads)
+    gnorm = jnp.asarray(grad_norm, jnp.float32)
     scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
     fstep = step.astype(jnp.float32)
     return {

@@ -27,12 +27,26 @@ def elastic_mesh_shape(
     >>> elastic_mesh_shape(256, model=16)
     ((16, 16), ('data', 'model'))
     """
+    if model < 1:
+        raise ValueError(f"model axis must be >= 1, got {model}")
+    if n_devices < model:
+        raise ValueError(
+            f"{n_devices} devices cannot host a model axis of {model}"
+        )
     if n_devices % model != 0:
         raise ValueError(f"{n_devices} devices not divisible by model={model}")
     rest = n_devices // model
     if prefer_pods and pod_size:
         chips_per_pod = pod_size
-        if n_devices % chips_per_pod == 0 and n_devices // chips_per_pod > 1:
+        # a pod must hold whole model groups, or the (pod, data, model)
+        # product silently loses devices (pod_size=24, model=16 used to
+        # yield a 32-device mesh for 48 devices)
+        if (
+            chips_per_pod % model == 0
+            and chips_per_pod >= model
+            and n_devices % chips_per_pod == 0
+            and n_devices // chips_per_pod > 1
+        ):
             pods = n_devices // chips_per_pod
             data = chips_per_pod // model
             return (pods, data, model), ("pod", "data", "model")

@@ -56,7 +56,11 @@ class StragglerMonitor:
         ev = None
         if len(self.window) >= 8:
             med = statistics.median(self.window)
-            mad = statistics.median(abs(x - med) for x in self.window) or 1e-9
+            mad = statistics.median(abs(x - med) for x in self.window)
+            # floor the MAD at 1% of the median: a window of near-identical
+            # step times has MAD ~ 0, and the raw z-score then flags
+            # microsecond jitter as a straggler (found by the unit sweep)
+            mad = max(mad, 0.01 * med, 1e-9)
             z = 0.6745 * (dt - med) / mad
             if z > self.z_threshold:
                 ev = StragglerEvent(self._step, dt, med, z)

@@ -22,13 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.engine import TransferEngine
+from repro.core.engine import EngineConfig, TransferEngine
 from repro.core.hoststream import HostStreamExecutor, StreamStats
 from repro.core.refspec import PrefetchSpec
+from repro.core.weightstream import WeightStreamPlan
 from repro.models import transformer
 from repro.optim.adamw import (
     AdamWConfig,
     adamw_globals,
+    adamw_globals_from_norm,
     adamw_init,
     adamw_leaf_update,
     adamw_update,
@@ -338,6 +340,601 @@ def make_streamed_train_step(
 
     step_fn.close = updater.close  # type: ignore[attr-defined]
     return step_fn
+
+
+# ---------------------------------------------------------------------------
+# weight-streamed training / serving (host- or disk-homed model parameters)
+# ---------------------------------------------------------------------------
+
+
+def _abstract_leaf(x) -> bool:
+    return isinstance(x, (jax.core.Tracer, jax.ShapeDtypeStruct))
+
+
+def _opt_state_leaf(p):
+    """AdamW state for one host-homed parameter leaf (numpy between steps;
+    tracer-safe for the driver's ``eval_shape`` restore template)."""
+    if _abstract_leaf(p):
+        z = jnp.zeros(jnp.shape(p), jnp.float32)
+        return {"master": p.astype(jnp.float32), "m": z, "v": z}
+    a = np.asarray(p)
+    return {
+        "master": np.asarray(a, np.float32),
+        "m": np.zeros(a.shape, np.float32),
+        "v": np.zeros(a.shape, np.float32),
+    }
+
+
+def _init_group_f32(key: jax.Array, cfg: ModelConfig, plan: WeightStreamPlan, g, shell_box: dict):
+    """One home group's f32 init leaves — exactly :func:`transformer.init_model`'s
+    values for those leaves, computed without materializing any other layer
+    (the group-wise init: at most one group is device-resident at a time)."""
+    if g.kind == "layers":
+        return transformer.init_model_slice(key, cfg, g.lo, g.hi)
+    if "shell" not in shell_box:
+        shell_box["shell"] = transformer.init_model_shell(key, cfg)
+    keys = plan.embed_keys if g.kind == "embed" else plan.head_home_keys
+    return {k: shell_box["shell"][k] for k in keys}
+
+
+def init_weight_streamed_params(
+    key: jax.Array, cfg: ModelConfig, plan: WeightStreamPlan
+) -> dict:
+    """Parameter home (compute-dtype, host-numpy leaves) initialized
+    group-wise: bitwise-identical to homing ``init_train_state(key, cfg)``
+    but only ever one transfer group device-resident — arbitrarily large
+    models initialize under the device budget."""
+    dt = cfg.compute_dtype
+    shell_box: dict = {}
+    groups = {}
+    for g in plan.groups:
+        f32 = _init_group_f32(key, cfg, plan, g, shell_box)
+        groups[g.key] = jax.tree.map(
+            lambda p: _to_host(p.astype(dt)), f32
+        )
+    return {"groups": groups}
+
+
+def init_weight_streamed_state(key: jax.Array, cfg: ModelConfig, plan: WeightStreamPlan) -> dict:
+    """``{"params": home, "opt": grouped state}`` with host-numpy leaves
+    (the ``pinned_host`` home; callers spill/place for disk/device kinds).
+
+    Initialization is group-wise (see :func:`init_weight_streamed_params`),
+    and the AdamW masters come from the **f32** init values — the same
+    fidelity as :func:`init_train_state`, whose master is taken before the
+    compute-dtype cast."""
+    dt = cfg.compute_dtype
+    shell_box: dict = {}
+    p_groups = {}
+    o_groups = {}
+    for g in plan.groups:
+        f32 = _init_group_f32(key, cfg, plan, g, shell_box)
+        p_groups[g.key] = jax.tree.map(lambda p: _to_host(p.astype(dt)), f32)
+        o_groups[g.key] = jax.tree.map(_opt_state_leaf, f32)
+    step = (
+        jnp.zeros((), jnp.int32)
+        if any(_abstract_leaf(x) for x in jax.tree.leaves(p_groups))
+        else np.zeros((), np.int32)
+    )
+    return {
+        "params": {"groups": p_groups},
+        "opt": {"groups": o_groups, "step": step},
+    }
+
+
+def spill_weight_streamed_state(
+    plan: WeightStreamPlan, state: dict, store
+) -> dict:
+    """Re-home a weight-streamed train state at the ``DiskHost`` tier: one
+    spill chunk per param group (``wp/<key>``) and one per moment group
+    (``wopt/<key>``).  Abstract templates and already-spilled groups pass
+    through — the trainer calls this after checkpoint restore to re-impose
+    the disk home on the plain host arrays restore hands back."""
+    from repro.core.spillstore import is_disk_leaf
+
+    home = plan.spill_home(state["params"], store)
+    opt_groups = {}
+    for g in plan.groups:
+        tree = state["opt"]["groups"][g.key]
+        leaves = jax.tree.leaves(tree)
+        if any(_abstract_leaf(x) for x in leaves):
+            return {"params": home, "opt": state["opt"]}
+        if not all(is_disk_leaf(x) for x in leaves):
+            store.put(f"wopt/{g.key}", tree)
+            tree = store.get(f"wopt/{g.key}")
+        opt_groups[g.key] = tree
+    return {
+        "params": home,
+        "opt": {"groups": opt_groups, "step": state["opt"]["step"]},
+    }
+
+
+def _leaf_sqsums(tree: Pytree) -> tuple:
+    """Per-leaf squared sums (f32) — the partial terms of
+    :func:`repro.optim.adamw.global_norm`, computed group-wise so the full
+    gradient tree never has to co-reside."""
+    return tuple(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)
+    )
+
+
+def make_weight_streamed_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    mesh=None,
+    sharder=None,
+    *,
+    plan: WeightStreamPlan,
+    prefetch: Optional[PrefetchSpec] = None,
+    engine: Optional[TransferEngine] = None,
+    stats: Optional[StreamStats] = None,
+    opt_stats: Optional[StreamStats] = None,
+    spill_store=None,
+    param_shardings: Optional[Pytree] = None,
+    param_kind: str = "pinned_host",
+) -> Callable[[dict, Pytree], tuple[dict, dict]]:
+    """``(state, batch) -> (state, metrics)`` with host/disk-homed weights.
+
+    ``state = {"params": ..., "opt": ...}`` as built by
+    :func:`init_weight_streamed_state` (grouped homes + grouped moments).
+    One step runs three streamed passes over the plan's transfer groups:
+
+    forward
+        fetch order ``embed, L0..Ln, head``; each group applies its jitted
+        stage while the next groups stream in behind it.  The head stage
+        computes the loss **and** the head/trunk cotangents (its params are
+        in hand, so the head group is fetched exactly once).
+    backward
+        **reverse** fetch order ``Ln..L0, embed``: each layer group is
+        re-fetched and its vjp recomputes the group forward from the saved
+        boundary activation (group-granular activation checkpointing), so
+        the backward peak residency equals the forward's.  Per-group
+        gradients stream back D2H through the engine's pipelined writeback;
+        per-leaf squared sums stay on device for the global norm.
+    optimizer
+        reverse home order (head first — its gradients were born on device
+        and are released immediately): each group streams
+        ``{grads, moments}`` H2D and its updated ``{params, moments}`` ride
+        ONE pipelined D2H drain back to the home kind — the params
+        writeback shares the drain with the streamed-AdamW moments.
+
+    ``param_kind`` names the home tier (``pinned_host`` | ``disk_host`` |
+    ``device`` — the bitwise baseline: fetch groups pass through the
+    engine by reference and updated groups are re-placed on device).  The
+    math per group is exactly :func:`repro.optim.adamw.adamw_leaf_update`
+    with globals from the streamed norm, and every kind runs the same
+    jitted programs on the same values — streamed runs are bitwise-equal
+    to the device-resident run (gated in ``benchmarks/weight_stream.py``).
+
+    ``stats`` accounts the parameter fetch passes (forward + backward) —
+    its ``peak_inflight_bytes`` is what ``--device-budget-mb`` bounds;
+    ``opt_stats`` accounts the optimizer phase separately.
+    """
+    if param_kind == "disk_host" and spill_store is None:
+        raise ValueError("param_kind='disk_host' requires a spill_store")
+    prefetch = prefetch or PrefetchSpec(
+        buffer_size=plan.n_groups + 2, distance="auto"
+    )
+    mode = "on_demand" if prefetch.on_demand else "prefetch"
+    pf = None if mode == "on_demand" else prefetch
+    own_engine = engine is None
+    if engine is None:
+        engine = TransferEngine(
+            EngineConfig(max_distance=plan.max_distance_for_budget())
+        )
+    elif (
+        plan.device_budget_bytes is not None
+        and engine.config.max_distance > plan.max_distance_for_budget()
+    ):
+        raise ValueError(
+            f"engine max_distance={engine.config.max_distance} exceeds the "
+            f"device budget's window cap {plan.max_distance_for_budget()}; "
+            "configure the engine from the plan"
+        )
+    stats = stats if stats is not None else StreamStats()
+    opt_stats = opt_stats if opt_stats is not None else StreamStats()
+    nlg = len(plan.layer_groups)
+    f32 = jnp.float32
+
+    # -- jitted stage programs (identical for every param kind) -------------
+    @jax.jit
+    def embed_fwd(group, batch):
+        x = transformer.embed_stage(cfg, group, batch, sharder=sharder)
+        return x, transformer.stage_angles(cfg, batch, x.shape[1])
+
+    @jax.jit
+    def group_fwd(group, x, aux, angles):
+        return transformer.block_group_train(cfg, group, x, aux, angles, mesh, sharder)
+
+    def _head_loss(group, x, aux, batch):
+        return transformer.head_stage_loss(cfg, group, x, aux, batch)
+
+    @jax.jit
+    def head_grad(group, x, aux, batch):
+        (loss, metrics), (dp, dx) = jax.value_and_grad(
+            _head_loss, argnums=(0, 1), has_aux=True
+        )(group, x, aux, batch)
+        dp_home, dp_embed = plan.split_head_grads(dp)
+        return loss, metrics, dp_home, dp_embed, dx, _leaf_sqsums(dp_home)
+
+    @jax.jit
+    def group_bwd(group, x_in, angles, ct_x):
+        def f(p, x):
+            return transformer.block_group_train(
+                cfg, p, x, jnp.zeros((), f32), angles, mesh, sharder
+            )
+
+        _, vjp = jax.vjp(f, group, x_in)
+        dp, dx = vjp((ct_x, jnp.ones((), f32)))
+        return dp, dx, _leaf_sqsums(dp)
+
+    @jax.jit
+    def embed_bwd(group, batch, ct_x, extra):
+        def f(p):
+            return transformer.embed_stage(cfg, p, batch, sharder=sharder)
+
+        _, vjp = jax.vjp(f, group)
+        (dp,) = vjp(ct_x)
+        if extra is not None:
+            # tied/codebook head: the embedding table's gradient is the sum
+            # of the gather path and the head path (autodiff would have
+            # summed them in the monolithic graph)
+            dp = dict(dp)
+            dp["embed"] = jax.tree.map(
+                lambda a, b: a + b.astype(a.dtype), dp["embed"], extra
+            )
+        return dp, _leaf_sqsums(dp)
+
+    @jax.jit
+    def globals_fn(sq_chunks, step):
+        gnorm = jnp.sqrt(
+            jnp.sum(jnp.stack([s for chunk in sq_chunks for s in chunk]))
+        )
+        return adamw_globals_from_norm(opt_cfg, gnorm, step)
+
+    @jax.jit
+    def opt_group(glob, grads_tree, state_tree):
+        flat_g, treedef = jax.tree.flatten(grads_tree)
+        flat_s = treedef.flatten_up_to(state_tree)
+        out = [adamw_leaf_update(opt_cfg, glob, g, s) for g, s in zip(flat_g, flat_s)]
+        new_p = treedef.unflatten([p.astype(cfg.compute_dtype) for p, _ in out])
+        new_s = treedef.unflatten([s for _, s in out])
+        return new_p, new_s
+
+    # -- streamed phase drivers ---------------------------------------------
+    box: dict = {}
+
+    def apply_f(i, carry, group):
+        if i == 0:
+            box["x"], box["angles"] = embed_fwd(group, box["batch"])
+            box["aux"] = jnp.zeros((), f32)
+            box["acts"] = []
+            return box["x"]
+        if i <= nlg:
+            box["acts"].append(box["x"])
+            box["x"], box["aux"] = group_fwd(group, box["x"], box["aux"], box["angles"])
+            return box["x"]
+        loss, metrics, dp_home, dp_embed, dx, sq = head_grad(
+            group, box["x"], box["aux"], box["batch"]
+        )
+        box.update(
+            loss=loss, metrics=metrics, dp_head_home=dp_home,
+            dp_head_embed=dp_embed, ct=dx, sq=[sq],
+        )
+        return loss
+
+    def apply_b(i, carry, group):
+        if i < nlg:
+            x_in = box["acts"][nlg - 1 - i]  # reverse fetch order
+            dp, dx, sq = group_bwd(group, x_in, box["angles"], box["ct"])
+            box["ct"] = dx
+            box["sq"].append(sq)
+            return dx, dp
+        dp, sq = embed_bwd(group, box["batch"], box["ct"], box["dp_head_embed"])
+        box["sq"].append(sq)
+        return box["ct"], dp
+
+    def apply_o(i, carry, group):
+        new_p, new_s = opt_group(box["glob"], group["g"], group["s"])
+        return carry, {"p": new_p, "s": new_s}
+
+    ex_f = HostStreamExecutor(apply_f, indexed=True, engine=engine)
+    ex_b = HostStreamExecutor(apply_b, indexed=True, writeback=True, engine=engine)
+    ex_o = HostStreamExecutor(apply_o, indexed=True, writeback=True, engine=engine)
+
+    sh_fwd = plan.group_shardings(param_shardings)
+    sh_home = plan.home_group_shardings(param_shardings)
+    sh_bwd = None
+    sh_o = None
+    if param_shardings is not None:
+        sh_bwd = [sh_fwd[i] for i in range(nlg, 0, -1)] + [sh_fwd[0]]
+        opt_sh = [
+            jax.tree.map(
+                lambda s: {"master": s, "m": s, "v": s},
+                h,
+                is_leaf=lambda s: isinstance(s, jax.sharding.NamedSharding),
+            )
+            for h in sh_home
+        ]
+        order = [plan.n_groups - 1] + list(range(nlg, 0, -1)) + [0]
+        sh_o = [{"g": sh_home[j], "s": opt_sh[j]} for j in order]
+
+    #: phase-O group order: head first (its grads were born on device at the
+    #: head stage and pass by reference — consumed and released immediately)
+    o_order = (
+        [plan.groups[-1]]
+        + [plan.groups[i] for i in range(nlg, 0, -1)]
+        + [plan.groups[0]]
+    )
+
+    def _rehome(g, p_new, s_new, idx):
+        if param_kind == "disk_host":
+            spill_store.put(plan.spill_key(g), p_new)
+            spill_store.put(f"wopt/{g.key}", s_new)
+            return spill_store.get(plan.spill_key(g)), spill_store.get(f"wopt/{g.key}")
+        if param_kind == "device":
+            sh = sh_home[idx] if sh_home is not None else None
+            if sh is None:
+                return jax.device_put(p_new), jax.device_put(s_new)
+            opt_sh = jax.tree.map(
+                lambda s: {"master": s, "m": s, "v": s},
+                sh,
+                is_leaf=lambda s: isinstance(s, jax.sharding.NamedSharding),
+            )
+            return jax.device_put(p_new, sh), jax.device_put(s_new, opt_sh)
+        return p_new, s_new  # pinned_host: the drained numpy IS the home
+
+    def step_fn(state, batch):
+        home, opt = state["params"], state["opt"]
+        box.clear()
+        box["batch"] = batch
+
+        # phase F: forward fetch order [embed, L0..Ln, head]
+        fwd_groups = plan.fetch_groups_forward(home)
+        ex_f.run(
+            jnp.zeros(()), fwd_groups, mode=mode, prefetch=pf, stats=stats,
+            group_shardings=sh_fwd,
+        )
+
+        # phase B: reverse fetch order [Ln..L0, embed]; grads drain D2H
+        bwd_groups = [fwd_groups[i] for i in range(nlg, 0, -1)] + [fwd_groups[0]]
+        _, grad_outs = ex_b.run(
+            box["ct"], bwd_groups, mode=mode, prefetch=pf, stats=stats,
+            group_shardings=sh_bwd,
+        )
+
+        step_no = int(np.asarray(opt["step"])) + 1
+        box["glob"] = globals_fn(tuple(box["sq"]), step_no)
+
+        # phase O: {grads, moments} H2D, {params, moments} one D2H drain
+        grads_by_key = {plan.groups[-1].key: box["dp_head_home"]}
+        for j, g in enumerate(reversed(plan.layer_groups)):
+            grads_by_key[g.key] = grad_outs[j]
+        grads_by_key[plan.groups[0].key] = grad_outs[-1]
+        o_groups = [
+            {"g": grads_by_key[g.key], "s": opt["groups"][g.key]} for g in o_order
+        ]
+        _, o_outs = ex_o.run(
+            jnp.zeros(()), o_groups, mode=mode, prefetch=pf, stats=opt_stats,
+            group_shardings=sh_o,
+        )
+
+        new_home: dict = {}
+        new_opt: dict = {}
+        for g, out in zip(o_order, o_outs):
+            p_new, s_new = _rehome(g, out["p"], out["s"], g.index)
+            new_home[g.key] = p_new
+            new_opt[g.key] = s_new
+
+        glob = box["glob"]
+        metrics = {
+            "loss": box["loss"], **box["metrics"],
+            "grad_norm": glob["grad_norm"], "lr": glob["lr"],
+        }
+        new_state = {
+            "params": {"groups": new_home},
+            "opt": {"groups": new_opt, "step": np.asarray(step_no, np.int32)},
+        }
+        # release the step's device scratch (boundary activations, head
+        # grads, cotangents) — it must not outlive the step into the
+        # checkpoint/data gap, where the residency model doesn't count it
+        box.clear()
+        return new_state, metrics
+
+    def close():
+        for ex in (ex_f, ex_b, ex_o):
+            ex.close()
+        if own_engine:
+            engine.close()
+
+    step_fn.close = close  # type: ignore[attr-defined]
+    step_fn.param_stats = stats  # type: ignore[attr-defined]
+    step_fn.opt_stats = opt_stats  # type: ignore[attr-defined]
+    step_fn.engine = engine  # type: ignore[attr-defined]
+    return step_fn
+
+
+def make_weight_streamed_prefill_step(
+    cfg: ModelConfig,
+    plan: WeightStreamPlan,
+    batch_size: int,
+    seq_len: int,
+    mesh=None,
+    sharder=None,
+    *,
+    engine: TransferEngine,
+    prefetch: Optional[PrefetchSpec] = None,
+    stats: Optional[StreamStats] = None,
+    param_shardings: Optional[Pytree] = None,
+) -> Callable[[dict, Pytree], tuple[jax.Array, Pytree]]:
+    """``(home, batch) -> (last-token logits, caches)`` with the params
+    streamed group-wise; each layer group fills its stacked cache slice and
+    the full cache is concatenated once at the end."""
+    prefetch = prefetch or PrefetchSpec(
+        buffer_size=plan.n_groups + 2, distance="auto"
+    )
+    mode = "on_demand" if prefetch.on_demand else "prefetch"
+    pf = None if mode == "on_demand" else prefetch
+    nlg = len(plan.layer_groups)
+
+    @jax.jit
+    def embed_fwd(group, batch):
+        x = transformer.embed_stage(cfg, group, batch, sharder=sharder)
+        return x, transformer.stage_angles(cfg, batch, x.shape[1])
+
+    @jax.jit
+    def group_prefill(group, x, angles):
+        n = jax.tree.leaves(group)[0].shape[0]
+        cache = transformer.init_cache_group(
+            cfg, n, batch_size, seq_len, cfg.compute_dtype
+        )
+        return transformer.block_group_prefill(cfg, group, cache, x, angles, sharder)
+
+    @jax.jit
+    def head_fwd(group, x):
+        return transformer.head_stage_logits(cfg, group, x[:, -1:])
+
+    @jax.jit
+    def concat0(slices):
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *slices)
+
+    box: dict = {}
+
+    def apply(i, carry, group):
+        if i == 0:
+            box["x"], box["angles"] = embed_fwd(group, box["batch"])
+            box["slices"] = []
+            return box["x"]
+        if i <= nlg:
+            box["x"], sl = group_prefill(group, box["x"], box["angles"])
+            box["slices"].append(sl)
+            return box["x"]
+        box["logits"] = head_fwd(group, box["x"])
+        return box["logits"]
+
+    ex = HostStreamExecutor(apply, indexed=True, engine=engine)
+    sh_fwd = plan.group_shardings(param_shardings)
+
+    def prefill(home, batch):
+        box.clear()
+        box["batch"] = batch
+        ex.run(
+            jnp.zeros(()), plan.fetch_groups_forward(home), mode=mode,
+            prefetch=pf, stats=stats, group_shardings=sh_fwd,
+        )
+        logits, caches = box["logits"], concat0(tuple(box["slices"]))
+        box.clear()  # don't retain the per-group cache slices between calls
+        return logits, caches
+
+    prefill.close = ex.close  # type: ignore[attr-defined]
+    return prefill
+
+
+def make_weight_streamed_decode_step(
+    cfg: ModelConfig,
+    plan: WeightStreamPlan,
+    mesh=None,
+    sharder=None,
+    *,
+    engine: TransferEngine,
+    prefetch: Optional[PrefetchSpec] = None,
+    stats: Optional[StreamStats] = None,
+    param_shardings: Optional[Pytree] = None,
+    paged: bool = True,
+) -> Callable[..., tuple[jax.Array, Pytree]]:
+    """Streamed-params decode step.
+
+    ``paged=True``: ``(home, view, batch, pos) -> (logits, caches)`` over a
+    pager page view (assembly is the same separate jit as
+    :func:`make_paged_decode_step`, so paging composes unchanged).
+    ``paged=False``: ``(home, caches, batch, pos)`` over a dense cache.
+    Per step the fetch groups stream in forward order while each layer
+    group decodes against its static cache slice; the updated slices are
+    concatenated back into the dense cache.
+    """
+    from repro.core import kvpager
+
+    prefetch = prefetch or PrefetchSpec(
+        buffer_size=plan.n_groups + 2, distance="auto"
+    )
+    mode = "on_demand" if prefetch.on_demand else "prefetch"
+    pf = None if mode == "on_demand" else prefetch
+    nlg = len(plan.layer_groups)
+    bounds = [(g.lo, g.hi) for g in plan.layer_groups]
+
+    @jax.jit
+    def split(caches):
+        return tuple(
+            jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, lo, hi, axis=0), caches
+            )
+            for lo, hi in bounds
+        )
+
+    @jax.jit
+    def embed_dec(group, batch, pos):
+        x = transformer.embed_stage(cfg, group, batch, pos=pos, sharder=sharder)
+        return x, transformer.stage_angles(cfg, batch, 1, pos=pos)
+
+    @jax.jit
+    def group_dec(group, cache_slice, x, angles, pos):
+        return transformer.block_group_decode(
+            cfg, group, cache_slice, x, angles, pos, sharder
+        )
+
+    @jax.jit
+    def head_dec(group, x):
+        return transformer.head_stage_logits(cfg, group, x)
+
+    @jax.jit
+    def concat0(slices):
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *slices)
+
+    assemble = jax.jit(kvpager.assemble_view)
+    box: dict = {}
+
+    def apply(i, carry, group):
+        if i == 0:
+            box["x"], box["angles"] = embed_dec(group, box["batch"], box["pos"])
+            box["new_slices"] = []
+            return box["x"]
+        if i <= nlg:
+            box["x"], sl = group_dec(
+                group, box["slices"][i - 1], box["x"], box["angles"], box["pos"]
+            )
+            box["new_slices"].append(sl)
+            return box["x"]
+        box["logits"] = head_dec(group, box["x"])
+        return box["logits"]
+
+    ex = HostStreamExecutor(apply, indexed=True, engine=engine)
+    sh_fwd = plan.group_shardings(param_shardings)
+
+    def decode(home, caches, batch, pos):
+        box.clear()
+        box["batch"] = batch
+        box["pos"] = pos
+        box["slices"] = split(caches)
+        ex.run(
+            jnp.zeros(()), plan.fetch_groups_forward(home), mode=mode,
+            prefetch=pf, stats=stats, group_shardings=sh_fwd,
+        )
+        logits, new_caches = box["logits"], concat0(tuple(box["new_slices"]))
+        # a serving session calls this every step: dropping the old/new
+        # slice views here keeps cross-step cache residency at ONE dense
+        # cache, not three, while the pager prefetches the next cold set
+        box.clear()
+        return logits, new_caches
+
+    if paged:
+        def paged_decode(home, view, batch, pos):
+            return decode(home, assemble(view), batch, pos)
+
+        paged_decode.close = ex.close  # type: ignore[attr-defined]
+        paged_decode.dense = decode  # type: ignore[attr-defined]
+        return paged_decode
+    decode.close = ex.close  # type: ignore[attr-defined]
+    return decode
 
 
 def make_prefill_step(

@@ -1,0 +1,218 @@
+"""Checkpoint commit-sequence kill-point tests (ISSUE 5 satellite).
+
+The commit sequence in ``checkpoint/manager.py`` is::
+
+    write leaves+meta into step_X.tmp   (fsync'd)
+    [overwrite] step_X -> step_X.old    (move the previous copy aside)
+    step_X.tmp -> step_X                (the atomic commit rename)
+    fsync(dir); delete step_X.old
+
+A crash at ANY point must leave a loadable step behind, and a fresh
+``CheckpointManager`` (the restart) must recover the directory: stale
+``.tmp`` dirs are partial by construction and are swept; an orphaned
+``.old`` is the only surviving copy of its step exactly when the crash hit
+before the commit rename, and is recovered as the step.
+
+Two mechanisms: manufactured on-disk crash states (true process-death
+semantics — no rollback code ran) and injected exceptions (the in-process
+failure paths: rollback on a failed commit rename, a failed leaf write).
+"""
+import shutil
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(tag: float):
+    return {"w": np.full((4, 3), tag, np.float32), "b": np.arange(5, dtype=np.int32) + int(tag)}
+
+
+def _template():
+    return _tree(0.0)
+
+
+def _commit(directory, step, tag, keep=3):
+    mgr = CheckpointManager(directory, keep=keep)
+    mgr.save(step, _tree(tag), blocking=True)
+    return mgr
+
+
+def _value(tree) -> float:
+    return float(tree["w"][0, 0])
+
+
+def _make_committed_dir(tmp_path, name, step, tag):
+    """A fully-committed step_XXXX dir with ``tag`` contents, detached from
+    any manager (raw material for manufacturing crash states)."""
+    scratch = tmp_path / f"scratch-{name}"
+    _commit(scratch, step, tag)
+    return scratch / f"step_{step:08d}"
+
+
+# ---------------------------------------------------------------------------
+# manufactured crash states (process died, no in-process cleanup ran)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_mid_tmp_write_recovers_previous_step(tmp_path):
+    """Kill point: mid leaf write — a partial .tmp with no meta.json."""
+    d = tmp_path / "ckpt"
+    _commit(d, 0, 1.0)
+    tmp = d / "step_00000001.tmp"
+    tmp.mkdir()
+    with open(tmp / "w.npy", "wb") as f:
+        f.write(b"\x93NUMPY partial garbage")
+    mgr = CheckpointManager(d)  # the restart
+    assert not tmp.exists()  # partial tmp swept
+    step, tree = mgr.restore(_template())
+    assert step == 0 and _value(tree) == 1.0
+
+
+def test_crash_after_tmp_fully_written_before_commit(tmp_path):
+    """Kill point: after the tmp write, before any rename.  The tmp is
+    complete but uncommitted — it must still be treated as partial (the
+    commit rename is the durability point) and swept."""
+    d = tmp_path / "ckpt"
+    _commit(d, 0, 1.0)
+    full = _make_committed_dir(tmp_path, "a", 1, 2.0)
+    shutil.copytree(full, d / "step_00000001.tmp")
+    mgr = CheckpointManager(d)
+    assert not (d / "step_00000001.tmp").exists()
+    step, tree = mgr.restore(_template())
+    assert step == 0 and _value(tree) == 1.0
+
+
+def test_crash_after_move_aside_before_commit_recovers_old(tmp_path):
+    """Kill point: overwrite of step 0 crashed between ``final -> .old``
+    and ``tmp -> final``: the .old is the ONLY copy of the step and must be
+    recovered (the tmp is swept)."""
+    d = tmp_path / "ckpt"
+    _commit(d, 0, 1.0)
+    final = d / "step_00000000"
+    final.rename(d / "step_00000000.old")
+    new = _make_committed_dir(tmp_path, "b", 0, 2.0)
+    shutil.copytree(new, d / "step_00000000.tmp")
+    mgr = CheckpointManager(d)
+    assert not (d / "step_00000000.tmp").exists()
+    assert not (d / "step_00000000.old").exists()
+    step, tree = mgr.restore(_template())
+    assert step == 0 and _value(tree) == 1.0  # the old copy survived
+
+
+def test_crash_after_commit_before_old_delete_keeps_new(tmp_path):
+    """Kill point: after the commit rename, before the .old delete: the
+    new copy is committed — restore must see it, and the stale .old must
+    be dropped (not resurrected over the newer commit)."""
+    d = tmp_path / "ckpt"
+    _commit(d, 0, 2.0)  # the NEW committed copy
+    old = _make_committed_dir(tmp_path, "c", 0, 1.0)
+    shutil.copytree(old, d / "step_00000000.old")
+    mgr = CheckpointManager(d)
+    assert not (d / "step_00000000.old").exists()
+    step, tree = mgr.restore(_template())
+    assert step == 0 and _value(tree) == 2.0  # the commit won
+
+
+def test_crash_before_first_commit_leaves_no_steps(tmp_path):
+    d = tmp_path / "ckpt"
+    d.mkdir()
+    (d / "step_00000000.tmp").mkdir()
+    mgr = CheckpointManager(d)
+    assert mgr.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_template())
+
+
+# ---------------------------------------------------------------------------
+# injected exceptions (the in-process failure paths)
+# ---------------------------------------------------------------------------
+
+
+def test_failed_leaf_write_keeps_previous_step(tmp_path, monkeypatch):
+    """np.save raising mid-write surfaces on the (blocking) save, leaves
+    the previous commit loadable, and the next init sweeps the tmp."""
+    d = tmp_path / "ckpt"
+    mgr = _commit(d, 0, 1.0)
+    real_save = np.save
+    calls = {"n": 0}
+
+    def flaky_save(f, arr, *a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:  # second leaf of the new checkpoint
+            raise RuntimeError("injected leaf-write fault")
+        return real_save(f, arr, *a, **kw)
+
+    monkeypatch.setattr(np, "save", flaky_save)
+    with pytest.raises(RuntimeError, match="injected leaf-write"):
+        mgr.save(1, _tree(2.0), blocking=True)
+    monkeypatch.setattr(np, "save", real_save)
+    mgr2 = CheckpointManager(d)
+    assert not (d / "step_00000001.tmp").exists()
+    step, tree = mgr2.restore(_template())
+    assert step == 0 and _value(tree) == 1.0
+
+
+def test_failed_commit_rename_rolls_back_old_copy(tmp_path, monkeypatch):
+    """A commit rename that raises must roll the moved-aside previous copy
+    back into place — the step stays loadable with its OLD contents and no
+    .old orphan remains."""
+    d = tmp_path / "ckpt"
+    mgr = _commit(d, 0, 1.0)
+    real_rename = Path.rename
+
+    def flaky_rename(self, target):
+        if str(self).endswith(".tmp") and not str(target).endswith(".old"):
+            raise OSError("injected commit-rename fault")
+        return real_rename(self, target)
+
+    monkeypatch.setattr(Path, "rename", flaky_rename)
+    with pytest.raises(OSError, match="injected commit-rename"):
+        mgr.save(0, _tree(2.0), blocking=True)  # overwrite of step 0
+    monkeypatch.setattr(Path, "rename", real_rename)
+    assert not (d / "step_00000000.old").exists()
+    step, tree = mgr.restore(_template())
+    assert step == 0 and _value(tree) == 1.0  # rolled back to the old copy
+    # and the manager is still serviceable: a clean overwrite commits
+    mgr.save(0, _tree(3.0), blocking=True)
+    step, tree = mgr.restore(_template())
+    assert step == 0 and _value(tree) == 3.0
+
+
+def test_every_kill_point_always_leaves_a_loadable_step(tmp_path):
+    """Sweep: for each kill point of an overwrite save of step 1 (with a
+    committed step 0 behind it), a restart must find SOME loadable step,
+    and step 0 must never be the casualty of step 1's crash."""
+    kill_states = {
+        "partial_tmp": lambda d: (d / "step_00000001.tmp").mkdir(),
+        "full_tmp": lambda d: shutil.copytree(
+            _make_committed_dir(d.parent, "k1", 1, 9.0), d / "step_00000001.tmp"
+        ),
+        "old_moved_no_commit": lambda d: (
+            (d / "step_00000001").rename(d / "step_00000001.old"),
+            shutil.copytree(
+                _make_committed_dir(d.parent, "k2", 1, 9.0),
+                d / "step_00000001.tmp",
+            ),
+        ),
+        "committed_old_undeleted": lambda d: shutil.copytree(
+            _make_committed_dir(d.parent, "k3", 1, 8.0), d / "step_00000001.old"
+        ),
+    }
+    for name, make_state in kill_states.items():
+        d = tmp_path / f"ckpt-{name}"
+        _commit(d, 0, 1.0)
+        if name in ("old_moved_no_commit", "committed_old_undeleted"):
+            _commit(d, 1, 2.0)
+        make_state(d)
+        mgr = CheckpointManager(d)
+        steps = mgr.all_steps()
+        assert 0 in steps, (name, steps)
+        step, tree = mgr.restore(_template(), step=0)
+        assert _value(tree) == 1.0, name
+        latest = mgr.latest_step()
+        _, latest_tree = mgr.restore(_template(), step=latest)
+        assert np.isfinite(_value(latest_tree)), name
+        assert not list(d.glob("*.tmp")) and not list(d.glob("*.old")), name

@@ -6,10 +6,22 @@ engine actually sees in training: mixed dtypes (bf16, f32, i32,
 f64-canonicalized), odd and zero-length shapes, deep pytrees, and
 disk-tier (spill store) sources — asserting bitwise equality with the
 per-leaf ``jax.device_put`` reference in every cell.
+
+The sharded axis (``ShardedGroupLayout`` on a forced 2-device mesh) runs
+the same property sweep in a subprocess: odd/unaligned shard byte-lengths
+(JAX rejects non-divisible explicit shardings outright, so "uneven" means
+shards whose sizes force unaligned offsets into the per-device staging
+buffers), replicated/zero-length/scalar leaves, bf16/f64, deep pytrees —
+asserting bitwise reassembly vs eager sharded placement and exact
+per-device request accounting.
 """
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from proptest import given, settings, strategies as hst
 
@@ -131,3 +143,153 @@ def test_disk_tier_roundtrip_through_engine(n, dtype_idx, tmp_path_factory=None)
             np.testing.assert_array_equal(
                 np.asarray(got), np.asarray(jax.device_put(src))
             )
+
+
+# ---------------------------------------------------------------------------
+# sharded axis: ShardedGroupLayout property sweep on a forced 2-device mesh
+# ---------------------------------------------------------------------------
+
+_SHARDED_PROP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import itertools
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.engine import TransferEngine
+from repro.core.spillstore import SpillStore
+from repro.jaxcompat import make_mesh
+
+assert len(jax.devices()) == 2, jax.devices()
+mesh = make_mesh((1, 2), ("data", "model"))
+SH = NamedSharding(mesh, P(None, "model"))
+SH0 = NamedSharding(mesh, P("model"))
+REP = NamedSharding(mesh, P())
+
+DTYPES = ["bfloat16", "float32", "int32", "float64"]
+
+
+def make_leaf(rng, shape, dtype_name):
+    a = rng.standard_normal(shape) if shape else rng.standard_normal()
+    a = np.asarray(a)
+    if dtype_name == "bfloat16":
+        return np.asarray(jnp.asarray(a, jnp.bfloat16))
+    if dtype_name == "int32":
+        return (a * 100).astype(np.int32)
+    return a.astype(dtype_name)
+
+
+def check(group, shardings, expect_devices=2):
+    '''engine submit -> staged group must equal eager sharded placement
+    bitwise, at exactly one request per (addressable device, group).'''
+    eng = TransferEngine()
+    try:
+        fut = eng.submit_group(0, group, device_shardings=shardings)
+        fut.wait()
+        staged = fut.group()
+        flat_g = jax.tree.leaves(group)
+        flat_s = jax.tree.leaves(staged)
+        flat_sh, _ = jax.tree.flatten(shardings, is_leaf=lambda s: s is None)
+        any_host = any(not isinstance(x, jax.Array) for x in flat_g)
+        # exact per-device request accounting: one coalesced request per
+        # addressable device (zero when everything already device-resident)
+        assert fut.n_requests == (expect_devices if any_host else 0), (
+            fut.n_requests, expect_devices)
+        for src, got, sh in zip(flat_g, flat_s, flat_sh):
+            ref = jax.device_put(src, sh) if sh is not None else jax.device_put(src)
+            assert got.dtype == ref.dtype, (got.dtype, ref.dtype)
+            assert got.shape == ref.shape
+            if sh is not None and not isinstance(src, jax.Array):
+                assert got.sharding == ref.sharding, (got.sharding, ref.sharding)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    finally:
+        eng.close()
+
+
+rng = np.random.default_rng(0)
+
+# cell 1: every dtype x shard-unfriendly shapes (odd shard byte-lengths that
+# leave unaligned tails in the per-device staging buffer), plus replicated
+# odd/zero-length/scalar leaves riding in the same group
+for dt in DTYPES:
+    for m in (1, 3, 5):  # sharded dim 2*m over 2 devices -> odd shards
+        group = {
+            "w": make_leaf(rng, (3, 2 * m), dt),      # (3, m) per device
+            "v": make_leaf(rng, (2 * m,), dt),        # (m,) per device
+            "rep_odd": make_leaf(rng, (7,), "float32"),
+            "zero": make_leaf(rng, (0,), dt),
+            "scalar": make_leaf(rng, (), dt),
+        }
+        shardings = {
+            "w": SH, "v": SH0, "rep_odd": REP, "zero": REP, "scalar": REP,
+        }
+        check(group, shardings)
+
+# cell 2: deep pytrees with mixed placement markers (None = default device)
+for depth in (1, 2, 3):
+    tree, shs = {}, {}
+    node, shnode = tree, shs
+    for lvl in range(depth):
+        leaves = tuple(
+            make_leaf(rng, (2, 2 * (lvl + 1) + 2), dt)
+            for dt in DTYPES
+        )
+        node["child"] = {"leaves": leaves, "l": [leaves[0]]}
+        shnode["child"] = {
+            "leaves": tuple(SH if i % 2 == 0 else REP for i in range(len(DTYPES))),
+            "l": [None],
+        }
+        node, shnode = node["child"], shnode["child"]
+    tree["top"] = make_leaf(rng, (4,), "float32")
+    shs["top"] = SH0
+    check(tree, shs)
+
+# cell 3: device-resident leaves pass through by reference in a sharded group
+dev = jax.device_put(make_leaf(rng, (2, 4), "float32"), SH)
+group = {"host": make_leaf(rng, (2, 4), "float32"), "dev": dev}
+check(group, {"host": SH, "dev": SH})
+
+# cell 4: all-device group costs zero requests
+check({"a": dev}, {"a": SH})
+
+# cell 5: disk-tier (spill store) leaves ride the same sharded path
+with tempfile.TemporaryDirectory() as d:
+    store = SpillStore(d)
+    for dt in ("bfloat16", "float64"):
+        src = {"w": make_leaf(rng, (2, 6), dt), "b": make_leaf(rng, (7,), "float32")}
+        store.put(f"g-{dt}", src)
+        disk = store.get(f"g-{dt}")
+        eng = TransferEngine()
+        try:
+            fut = eng.submit_group(0, disk, device_shardings={"w": SH, "b": REP})
+            fut.wait()
+            staged = fut.group()
+            assert fut.n_requests == 2 and fut.disk_requests == 1, (
+                fut.n_requests, fut.disk_requests)
+            for k, sh in (("w", SH), ("b", REP)):
+                ref = jax.device_put(src[k], sh)
+                np.testing.assert_array_equal(
+                    np.asarray(staged[k]), np.asarray(ref))
+        finally:
+            eng.close()
+
+print("SHARDED_PROP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_layout_property_sweep_2way_mesh():
+    """ShardedGroupLayout over the property space: odd/unaligned shard
+    lengths, bf16/f64 canonicalization, zero-length and scalar leaves, deep
+    pytrees, device pass-through, and disk-tier sources — bitwise vs eager
+    sharded placement with exact per-device request accounting."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_PROP_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+             "HOME": "/root"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED_PROP_OK" in proc.stdout

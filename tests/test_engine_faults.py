@@ -320,3 +320,66 @@ def test_disk_controller_persists_across_runs(tmp_path):
         eng.close()
 
     run_with_timeout(body)
+
+
+# ---------------------------------------------------------------------------
+# serve path: disk-stage fault mid-decode
+# ---------------------------------------------------------------------------
+
+
+def test_disk_stage_fault_mid_decode_recovers(tmp_path, monkeypatch):
+    """A disk-stage failure while a page fetch is in flight surfaces on the
+    decode step, releases its read-ahead window slot (no wedged pipeline),
+    and the session finishes with exactly the tokens of an un-faulted run —
+    the cold home copy is intact, so the page is simply re-fetched."""
+    from repro.configs import get_smoke_config
+    from repro.launch import serve as sv
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = get_smoke_config("smollm-360m")
+    mesh = make_local_mesh()
+    prompt = np.arange(1, 14, dtype=np.int32)
+
+    def run(fault: bool):
+        from repro.core.engine import TransferEngine as TE
+
+        real_acquire = TE._acquire_disk_staging
+        armed = {"on": False, "fired": 0}
+
+        def flaky_acquire(self, dsig, layout):
+            if armed["on"]:
+                armed["on"] = False
+                armed["fired"] += 1
+                raise RuntimeError("injected disk-stage fault")
+            return real_acquire(self, dsig, layout)
+
+        monkeypatch.setattr(TE, "_acquire_disk_staging", flaky_acquire)
+        with sv.ServeSession(
+            cfg, mesh, slots=1, max_len=24, kv_kind="disk_host",
+            page_len=4, hot_pages=0, seed=5,
+            spill_dir=str(tmp_path / ("faulted" if fault else "clean")),
+        ) as s:
+            rid = s.submit(prompt, 8)
+            s.admit_pending()
+            for _ in range(2):
+                s.step()
+            if fault:
+                armed["on"] = True
+                with pytest.raises(RuntimeError, match="injected disk-stage"):
+                    while s.pending_work():
+                        s.step()
+                assert armed["fired"] == 1
+                # the failed fetch must have released its window slot
+                assert s._engine._disk_in_use == 0
+            while s.pending_work():
+                s.step()
+            toks = np.asarray(s.requests[rid].emitted, np.int32)
+            # retire deleted the request's spill chunks — nothing leaked
+            assert not [k for k in s._store.keys() if k.startswith("kv/")]
+            assert s._engine._disk_in_use == 0
+        monkeypatch.setattr(TE, "_acquire_disk_staging", real_acquire)
+        return toks
+
+    clean = run_with_timeout(lambda: run(False))
+    faulted = run_with_timeout(lambda: run(True))
+    np.testing.assert_array_equal(faulted, clean)

@@ -1,0 +1,163 @@
+"""Unit tests for ``runtime/elastic.py`` and ``runtime/straggler.py``
+(ISSUE 5 satellite: these modules had only incidental coverage; the sweep
+below surfaced and pins two real bugs).
+
+Bugs found and fixed:
+  * ``elastic_mesh_shape(pod_size=...)`` with a pod size not divisible by
+    the model axis silently returned a mesh whose product lost devices
+    (48 devices, pod_size=24, model=16 -> a 32-device (2, 1, 16) mesh).
+  * ``StragglerMonitor`` with a window of near-identical step times had
+    MAD ~ 0, so the robust z-score flagged *microsecond* jitter as a
+    straggler; the MAD is now floored at 1% of the median.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import elastic_mesh_shape
+from repro.runtime.straggler import StragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# elastic_mesh_shape
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_shape_product_always_matches_device_count():
+    """Invariant: the returned mesh uses EVERY device, for every valid
+    (n_devices, model, pod_size) cell."""
+    for model in (1, 2, 4, 16):
+        for mult in (1, 2, 3, 15, 16, 30, 32, 64):
+            n = model * mult
+            for pod_size in (None, model, 2 * model, 24, n):
+                shape, axes = elastic_mesh_shape(n, model=model, pod_size=pod_size)
+                assert int(np.prod(shape)) == n, (n, model, pod_size, shape)
+                assert len(shape) == len(axes)
+                assert axes[-1] == "model" and shape[-1] == model
+
+
+def test_elastic_pod_size_not_divisible_by_model_falls_through():
+    """Bugfix pin: pod_size=24 with model=16 cannot form whole model groups
+    per pod; the old code returned (2, 1, 16) = 32 devices for 48."""
+    shape, axes = elastic_mesh_shape(48, model=16, pod_size=24)
+    assert int(np.prod(shape)) == 48
+    assert "pod" not in axes
+
+
+def test_elastic_pod_path_used_when_divisible():
+    shape, axes = elastic_mesh_shape(512, model=16, pod_size=256)
+    assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+    # degenerate pod count (single pod) keeps the flat mesh
+    shape, axes = elastic_mesh_shape(256, model=16, pod_size=256)
+    assert axes == ("data", "model") and shape == (16, 16)
+
+
+def test_elastic_prefer_pods_false_always_flat():
+    shape, axes = elastic_mesh_shape(512, model=16, prefer_pods=False)
+    assert axes == ("data", "model") and shape == (32, 16)
+
+
+def test_elastic_invalid_inputs_raise():
+    with pytest.raises(ValueError, match="not divisible"):
+        elastic_mesh_shape(100, model=16)
+    with pytest.raises(ValueError, match=">= 1"):
+        elastic_mesh_shape(16, model=0)
+    with pytest.raises(ValueError, match="cannot host"):
+        elastic_mesh_shape(8, model=16)
+    with pytest.raises(ValueError, match="cannot host"):
+        elastic_mesh_shape(0, model=16)
+
+
+def test_elastic_shrink_sequence_node_loss():
+    """The docstring scenario: losing hosts shrinks the data axis while the
+    model axis (an architectural choice) is preserved."""
+    healthy, _ = elastic_mesh_shape(512, model=16)
+    lost_two, _ = elastic_mesh_shape(480, model=16)
+    assert healthy == (2, 16, 16)
+    assert int(np.prod(lost_two)) == 480 and lost_two[-1] == 16
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+
+def _fill(m: StragglerMonitor, durations):
+    m.window.extend(durations)
+
+
+def test_straggler_identical_window_tolerates_jitter():
+    """Bugfix pin: with 20 identical 10 ms steps in the window, a step of
+    10.05 ms (0.5% jitter) must NOT be flagged — the raw MAD is zero and
+    the unfloored z-score was ~3e4."""
+    m = StragglerMonitor(window=32, z_threshold=6.0)
+    _fill(m, [0.010] * 20)
+    m.start_step(1)
+    m._t0 = time.perf_counter() - 0.01005  # 10.05 ms step
+    ev = m.end_step()
+    assert ev is None, ev
+
+
+def test_straggler_identical_window_still_flags_real_outlier():
+    m = StragglerMonitor(window=32, z_threshold=6.0)
+    _fill(m, [0.010] * 20)
+    m.start_step(2)
+    m._t0 = time.perf_counter() - 0.08  # 8x the median
+    ev = m.end_step()
+    assert ev is not None and ev.step == 2
+    assert ev.z > 6.0 and m.events == [ev]
+
+
+def test_straggler_needs_warm_window():
+    """No flagging before 8 samples (the z-score is meaningless)."""
+    m = StragglerMonitor(window=32)
+    for i in range(7):
+        m.start_step(i)
+        m._t0 = time.perf_counter() - (1.0 if i == 3 else 0.001)
+        assert m.end_step() is None
+    assert len(m.window) == 7
+
+
+def test_straggler_window_is_bounded():
+    m = StragglerMonitor(window=10)
+    for i in range(25):
+        m.start_step(i)
+        m._t0 = time.perf_counter() - 0.001
+        m.end_step()
+    assert len(m.window) == 10
+
+
+def test_straggler_deadline_only_while_step_in_flight():
+    m = StragglerMonitor(deadline_s=0.005)
+    assert not m.check_deadline()  # no step started
+    m.start_step(0)
+    m._t0 = time.perf_counter() - 0.01
+    assert m.check_deadline()
+    m.end_step()
+    assert not m.check_deadline()  # step finished — no stale deadline
+    m2 = StragglerMonitor()  # no deadline configured
+    m2.start_step(0)
+    time.sleep(0.001)
+    assert not m2.check_deadline()
+
+
+def test_straggler_end_without_start_asserts():
+    m = StragglerMonitor()
+    with pytest.raises(AssertionError):
+        m.end_step()
+
+
+def test_straggler_noisy_window_uses_real_mad():
+    """With genuine spread in the window the MAD floor must not mask real
+    outliers nor create false ones."""
+    rng = np.random.default_rng(0)
+    m = StragglerMonitor(window=50, z_threshold=6.0)
+    _fill(m, list(0.010 + rng.uniform(-0.002, 0.002, size=30)))
+    m.start_step(7)
+    m._t0 = time.perf_counter() - 0.011  # inside the spread
+    assert m.end_step() is None
+    m.start_step(8)
+    m._t0 = time.perf_counter() - 0.05  # 5x median, far outside
+    ev = m.end_step()
+    assert ev is not None and ev.step == 8

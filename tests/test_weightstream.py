@@ -1,0 +1,351 @@
+"""Streamed-parameters tests (ISSUE 5 tentpole).
+
+Pins the weight-streaming contract at unit and integration level:
+  * plan partition invariants (layer coverage, byte model, budget guards),
+  * streamed train step bitwise-equal to the device-resident run for
+    pinned_host and disk_host homes,
+  * streamed prefill/decode bitwise-equal to the monolithic executables,
+  * checkpoint round trip of host- AND disk-homed states (memmap leaves
+    saved by reference, restore template via eval_shape),
+  * exactly one coalesced H2D request per fetched (device, group) and the
+    device-budget cap on the engine's prefetch window.
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core.engine import EngineConfig, TransferEngine
+from repro.core.refspec import PrefetchSpec
+from repro.core.spillstore import SpillStore, is_disk_leaf
+from repro.core.weightstream import WeightStreamPlan, weight_stream_supported
+from repro.data.synthetic import SyntheticConfig, synthetic_batch
+from repro.optim.adamw import AdamWConfig
+from repro.train import steps as st
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(get_smoke_config("smollm-360m"), n_layers=4)
+
+
+@pytest.fixture(scope="module")
+def plan(cfg):
+    return WeightStreamPlan(cfg, st.abstract_params(cfg), layers_per_group=2)
+
+
+@pytest.fixture(scope="module")
+def opt_cfg():
+    return AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=32)
+
+
+def _batch(cfg, step=0):
+    return synthetic_batch(cfg, SyntheticConfig(cfg.vocab_size, 16, 2, seed=0), step)
+
+
+# ---------------------------------------------------------------------------
+# plan invariants
+# ---------------------------------------------------------------------------
+
+
+def test_plan_partitions_every_layer_exactly_once(cfg, plan):
+    covered = []
+    for g in plan.layer_groups:
+        covered.extend(range(g.lo, g.hi))
+    assert covered == list(range(cfg.n_layers))
+    assert plan.groups[0].kind == "embed" and plan.groups[-1].kind == "head"
+    # tied embeddings: the head fetch group re-reads the embed table
+    assert plan.head_reads_embed
+    params, _ = st.init_train_state(jax.random.PRNGKey(0), cfg)
+    fetch = plan.fetch_group(plan.init_home(params), plan.groups[-1])
+    assert "embed" in fetch and "ln_f" in fetch
+
+
+def test_plan_byte_model_and_budget_guards(cfg):
+    abs_p = st.abstract_params(cfg)
+    plan = WeightStreamPlan(cfg, abs_p, layers_per_group=1)
+    # peak is monotone in distance and bounded by the full fetch sequence
+    peaks = [plan.peak_device_bytes(d) for d in range(0, 6)]
+    assert peaks == sorted(peaks)
+    assert peaks[-1] <= sum(plan.fetch_sequence_bytes())
+    # a budget below the distance-1 peak is rejected outright
+    with pytest.raises(ValueError, match="cannot hold"):
+        WeightStreamPlan(cfg, abs_p, layers_per_group=1, device_budget_mb=1e-6)
+    # the window cap keeps the modeled peak under the budget
+    budget_mb = plan.peak_device_bytes(2) / 1e6
+    capped = WeightStreamPlan(
+        cfg, abs_p, layers_per_group=1, device_budget_mb=budget_mb
+    )
+    d = capped.max_distance_for_budget()
+    assert capped.peak_device_bytes(d) <= capped.device_budget_bytes
+
+
+def test_plan_rejects_unsupported_arch():
+    rg = get_smoke_config("recurrentgemma-2b")
+    assert not weight_stream_supported(rg)
+    with pytest.raises(ValueError, match="uniform"):
+        WeightStreamPlan(rg, st.abstract_params(rg))
+
+
+def test_home_assemble_roundtrip(cfg, plan):
+    params, _ = st.init_train_state(jax.random.PRNGKey(0), cfg)
+    home = plan.init_home(params)
+    back = plan.assemble(home)
+    for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_flatten_with_path(params)[0],
+        jax.tree_util.tree_flatten_with_path(back)[0],
+    ):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# streamed train step: bitwise vs the device-resident run
+# ---------------------------------------------------------------------------
+
+
+def _device_state(plan, state):
+    return {
+        "params": plan.device_home(state["params"]),
+        "opt": {
+            "groups": jax.device_put(state["opt"]["groups"]),
+            "step": state["opt"]["step"],
+        },
+    }
+
+
+def _run_steps(cfg, opt_cfg, plan, kind, n=2, store=None, distance="auto"):
+    step = st.make_weight_streamed_train_step(
+        cfg, opt_cfg, plan=plan, param_kind=kind, spill_store=store,
+        prefetch=PrefetchSpec(buffer_size=plan.n_groups + 2, distance=distance),
+    )
+    state = st.init_weight_streamed_state(jax.random.PRNGKey(0), cfg, plan)
+    if kind == "device":
+        state = _device_state(plan, state)
+    elif kind == "disk_host":
+        state = st.spill_weight_streamed_state(plan, state, store)
+    losses = []
+    try:
+        for k in range(n):
+            state, m = step(state, _batch(cfg, k))
+            losses.append(float(m["loss"]))
+    finally:
+        stats = step.param_stats
+        step.close()
+    return losses, state, stats
+
+
+def test_streamed_train_bitwise_vs_device(cfg, opt_cfg, plan):
+    ref_losses, ref_state, _ = _run_steps(cfg, opt_cfg, plan, "device")
+    losses, state, stats = _run_steps(cfg, opt_cfg, plan, "pinned_host")
+    assert losses == ref_losses
+    for key in ref_state["params"]["groups"]:
+        for a, b in zip(
+            jax.tree.leaves(state["params"]["groups"][key]),
+            jax.tree.leaves(ref_state["params"]["groups"][key]),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # exactly one coalesced H2D request per fetched (device, group)
+    assert stats.per_tier()["h2d"]["requests_per_device_group"] == 1.0
+    assert stats.h2d_requests == stats.n_groups > 0
+
+
+def test_streamed_train_disk_home_bitwise_and_writes_back(cfg, opt_cfg, plan):
+    ref_losses, _, _ = _run_steps(cfg, opt_cfg, plan, "device")
+    with tempfile.TemporaryDirectory() as d:
+        store = SpillStore(d, ephemeral=True)
+        losses, state, stats = _run_steps(
+            cfg, opt_cfg, plan, "disk_host", store=store
+        )
+        assert losses == ref_losses
+        # updated params and moments went back to their disk home
+        assert plan.is_spilled(state["params"])
+        assert all(
+            is_disk_leaf(v)
+            for v in jax.tree.leaves(state["opt"]["groups"])
+        )
+        # one spill chunk per fetch -> one disk request per non-head group,
+        # two for the tied head fetch (head home + embed table chunks)
+        assert stats.disk_requests > 0
+        store.close()
+
+
+@pytest.mark.parametrize("distance", [0, 1])
+def test_streamed_train_static_distances_bitwise(cfg, opt_cfg, plan, distance):
+    ref_losses, _, _ = _run_steps(cfg, opt_cfg, plan, "device")
+    losses, _, _ = _run_steps(
+        cfg, opt_cfg, plan, "pinned_host", distance=distance
+    )
+    assert losses == ref_losses
+
+
+# ---------------------------------------------------------------------------
+# streamed prefill / decode vs the monolithic executables
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_prefill_decode_match_monolithic(cfg, plan):
+    params, _ = st.init_train_state(jax.random.PRNGKey(0), cfg)
+    home = plan.init_home(params)
+    tokens = jnp.asarray(
+        np.pad(np.arange(1, 9, dtype=np.int32)[None, :], ((0, 0), (0, 8)))
+    )
+    with TransferEngine() as eng:
+        prefill = st.make_weight_streamed_prefill_step(
+            cfg, plan, 1, 16, engine=eng
+        )
+        decode = st.make_weight_streamed_decode_step(
+            cfg, plan, engine=eng, paged=False
+        )
+        logits, caches = prefill(home, {"tokens": tokens})
+        ref_prefill = jax.jit(st.make_prefill_step(cfg, 1, 16))
+        rl, rc = ref_prefill(params, {"tokens": tokens})
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(rl))
+        for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(rc)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        step_tok = {"tokens": jnp.asarray([[5]], jnp.int32)}
+        pos = jnp.asarray([8], jnp.int32)
+        l1, c1 = decode(home, caches, step_tok, pos)
+        ref_decode = jax.jit(st.make_decode_step(cfg))
+        l2, c2 = ref_decode(params, rc, step_tok, pos)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing host- and disk-homed states
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_host_home(cfg, opt_cfg, plan, tmp_path):
+    _, state, _ = _run_steps(cfg, opt_cfg, plan, "pinned_host", n=1)
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(0, state, blocking=True)
+    template = jax.eval_shape(
+        lambda: st.init_weight_streamed_state(jax.random.PRNGKey(0), cfg, plan)
+    )
+    step, restored = mgr.restore(template)
+    assert step == 0
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_roundtrip_disk_home_memmap_leaves(cfg, opt_cfg, plan, tmp_path):
+    """Disk-homed states checkpoint without materializing the tree: the
+    memmap leaves are snapshotted by reference and serialized leaf-wise;
+    restore hands back plain host arrays that re-spill bitwise."""
+    with tempfile.TemporaryDirectory() as d:
+        store = SpillStore(d, ephemeral=True)
+        _, state, _ = _run_steps(cfg, opt_cfg, plan, "disk_host", n=1, store=store)
+        assert any(is_disk_leaf(x) for x in jax.tree.leaves(state["params"]))
+        mgr = CheckpointManager(tmp_path, keep=2)
+        mgr.save(3, state, blocking=True)
+        template = jax.eval_shape(
+            lambda: st.init_weight_streamed_state(jax.random.PRNGKey(0), cfg, plan)
+        )
+        step, restored = mgr.restore(template)
+        assert step == 3
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the trainer's restore path: re-impose the disk home bitwise
+        respilled = st.spill_weight_streamed_state(plan, restored, store)
+        assert plan.is_spilled(respilled["params"])
+        for a, b in zip(jax.tree.leaves(respilled), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        store.close()
+
+
+def test_engine_window_capped_by_budget(cfg, opt_cfg):
+    """The adaptive controller can never stream past the device budget:
+    the engine's max_distance comes from the plan's byte model."""
+    abs_p = st.abstract_params(cfg)
+    free = WeightStreamPlan(cfg, abs_p, layers_per_group=1)
+    budget_mb = free.peak_device_bytes(1) / 1e6
+    plan = WeightStreamPlan(
+        cfg, abs_p, layers_per_group=1, device_budget_mb=budget_mb
+    )
+    cap = plan.max_distance_for_budget()
+    assert cap < 8  # the budget actually bites
+    engine = TransferEngine(EngineConfig(max_distance=cap))
+    step = st.make_weight_streamed_train_step(
+        cfg, opt_cfg, plan=plan, param_kind="pinned_host", engine=engine,
+    )
+    state = st.init_weight_streamed_state(jax.random.PRNGKey(0), cfg, plan)
+    try:
+        for k in range(2):
+            state, _ = step(state, _batch(cfg, k))
+        assert step.param_stats.peak_inflight_bytes <= plan.device_budget_bytes
+        if step.param_stats.distance_trace:
+            assert max(step.param_stats.distance_trace) <= cap
+    finally:
+        step.close()
+        engine.close()
+
+
+# ---------------------------------------------------------------------------
+# review-fix pins
+# ---------------------------------------------------------------------------
+
+
+def test_auto_group_sizing_uses_real_window_peak(cfg):
+    """Bugfix pin: the auto fit once modeled the peak as big + 2*lpg*layer
+    and could pick a layers_per_group whose true distance-1 sliding window
+    (3 consecutive layer groups) blew the budget, making the constructor
+    raise 'raise the budget' even though a smaller group size fit."""
+    big_cfg = dataclasses.replace(cfg, n_layers=12)
+    abs_p = st.abstract_params(big_cfg)
+    free = WeightStreamPlan(big_cfg, abs_p, layers_per_group=1)
+    budget_mb = (
+        max(free.embed_bytes, free.head_fetch_bytes) + 8 * free.per_layer_bytes
+    ) / 1e6
+    plan = WeightStreamPlan(big_cfg, abs_p, device_budget_mb=budget_mb)
+    assert plan.peak_device_bytes(1) <= plan.device_budget_bytes
+
+
+def test_groupwise_init_matches_monolithic_init(cfg, plan):
+    """Group-wise init (one transfer group device-resident at a time) must
+    be bitwise-identical to homing init_train_state: same per-layer keys,
+    same cast — and the AdamW masters keep the full f32 init values."""
+    params_f32 = st.transformer.init_model(jax.random.PRNGKey(3), cfg)
+    params = jax.tree.map(lambda p: p.astype(cfg.compute_dtype), params_f32)
+    ref_home = plan.init_home(params)
+    state = st.init_weight_streamed_state(jax.random.PRNGKey(3), cfg, plan)
+    for g in plan.groups:
+        for a, b in zip(
+            jax.tree.leaves(state["params"]["groups"][g.key]),
+            jax.tree.leaves(ref_home["groups"][g.key]),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # masters are the f32 init values, not a round trip through bf16
+        ref_f32 = plan.home_group(params_f32, g)
+        flat_ref = jax.tree.leaves(ref_f32)
+        flat_opt = jax.tree.flatten(
+            state["opt"]["groups"][g.key],
+            is_leaf=lambda x: isinstance(x, dict) and "master" in x,
+        )[0]
+        for r, o in zip(flat_ref, flat_opt):
+            np.testing.assert_array_equal(np.asarray(o["master"]), np.asarray(r))
+            assert o["master"].dtype == np.float32
+
+
+def test_loose_external_engine_rejected_under_budget(cfg, opt_cfg):
+    abs_p = st.abstract_params(cfg)
+    free = WeightStreamPlan(cfg, abs_p, layers_per_group=1)
+    budget_mb = free.peak_device_bytes(1) / 1e6
+    plan = WeightStreamPlan(
+        cfg, abs_p, layers_per_group=1, device_budget_mb=budget_mb
+    )
+    loose = TransferEngine(EngineConfig(max_distance=8))
+    try:
+        with pytest.raises(ValueError, match="window cap"):
+            st.make_weight_streamed_train_step(
+                cfg, opt_cfg, plan=plan, param_kind="pinned_host", engine=loose
+            )
+    finally:
+        loose.close()
