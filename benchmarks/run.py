@@ -23,11 +23,12 @@ SUITES = {
     "serve": ("benchmarks.serve_paged", "paged KV-cache serving vs per-step placement"),
     "shard": ("benchmarks.shard_stream", "sharding-aware coalescing vs per-leaf fallback (2-device mesh)"),
     "weights": ("benchmarks.weight_stream", "streamed model parameters under a device budget (modeled link)"),
+    "recovery": ("benchmarks.recovery", "self-healing runtime: retry overhead, fault bitwise-equality, CRC recovery, restart latency"),
 }
 
 #: the suites driven purely by the deterministic LinkModel emulation —
 #: meaningful on a noisy CI runner, unlike the wall-clock studies
-SMOKE_SUITES = ["engine", "disk", "serve", "shard", "weights"]
+SMOKE_SUITES = ["engine", "disk", "serve", "shard", "weights", "recovery"]
 
 
 def main() -> int:

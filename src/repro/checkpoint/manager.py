@@ -106,9 +106,20 @@ class CheckpointManager:
                 p.rename(final)
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree: Pytree, *, blocking: bool = False) -> None:
+    def save(
+        self,
+        step: int,
+        tree: Pytree,
+        *,
+        blocking: bool = False,
+        extra_meta: Optional[dict] = None,
+    ) -> None:
         """Snapshot ``tree`` at ``step``.  D2H happens here (synchronous);
         file I/O happens on a background thread unless ``blocking``.
+
+        ``extra_meta`` is recorded verbatim under ``meta.json``'s ``extra``
+        key (the driver stores its run identity there — mesh fingerprint,
+        weight grouping — which the elastic resharder reads on resume).
 
         Device leaves are copied to host now (they may be donated into the
         next step).  Host- and disk-homed leaves (numpy / spill-store
@@ -140,42 +151,22 @@ class CheckpointManager:
             ],
             "time": time.time(),
         }
+        if extra_meta:
+            meta["extra"] = dict(extra_meta)
 
         def write() -> None:
             try:
                 tmp = self.dir / f"step_{step:08d}.tmp"
-                final = self.dir / f"step_{step:08d}"
                 if tmp.exists():
                     shutil.rmtree(tmp)
                 tmp.mkdir(parents=True)
                 for name, arr in host:
-                    with open(tmp / f"{name}.npy", "wb") as f:
-                        np.save(f, arr)
-                        f.flush()
-                        os.fsync(f.fileno())
+                    self._write_leaf(tmp, name, arr)
                 with open(tmp / "meta.json", "w") as f:
                     json.dump(meta, f)
                     f.flush()
                     os.fsync(f.fileno())
-                # overwrite without a crash window: the previous copy moves
-                # aside and is deleted only AFTER the rename commits — a
-                # crash between the two never loses the only copy of a step
-                old = None
-                if final.exists():
-                    old = self.dir / f"step_{step:08d}.old"
-                    if old.exists():
-                        shutil.rmtree(old)
-                    final.rename(old)
-                try:
-                    tmp.rename(final)  # the atomic commit
-                except BaseException:
-                    if old is not None and not final.exists():
-                        old.rename(final)  # roll back: old copy stays latest
-                    raise
-                _fsync_dir(self.dir)  # the rename itself must be durable
-                if old is not None:
-                    shutil.rmtree(old, ignore_errors=True)
-                self._prune()
+                self._commit(step, tmp)
             except BaseException as e:  # noqa: BLE001 — surfaced via wait()
                 self._error = e
 
@@ -185,6 +176,80 @@ class CheckpointManager:
         else:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
+
+    @staticmethod
+    def _write_leaf(tmp: Path, name: str, arr: np.ndarray) -> None:
+        with open(tmp / f"{name}.npy", "wb") as f:
+            np.save(f, np.asarray(arr))
+            f.flush()
+            os.fsync(f.fileno())
+
+    def _commit(self, step: int, tmp: Path) -> None:
+        """Atomically promote a fully-written ``.tmp`` dir to the step dir.
+
+        Overwrite without a crash window: the previous copy moves aside and
+        is deleted only AFTER the rename commits — a crash between the two
+        never loses the only copy of a step."""
+        final = self.dir / f"step_{step:08d}"
+        old = None
+        if final.exists():
+            old = self.dir / f"step_{step:08d}.old"
+            if old.exists():
+                shutil.rmtree(old)
+            final.rename(old)
+        try:
+            tmp.rename(final)  # the atomic commit
+        except BaseException:
+            if old is not None and not final.exists():
+                old.rename(final)  # roll back: old copy stays latest
+            raise
+        _fsync_dir(self.dir)  # the rename itself must be durable
+        if old is not None:
+            shutil.rmtree(old, ignore_errors=True)
+        self._prune()
+
+    def save_streamed(
+        self,
+        step: int,
+        leaves,
+        *,
+        extra_meta: Optional[dict] = None,
+        treedef: str = "streamed",
+    ) -> None:
+        """Write a checkpoint from an *iterator* of ``(name, array)`` pairs,
+        holding one leaf in memory at a time — the elastic resharder's write
+        path: the new grouping is produced group-wise from memmapped old
+        leaves and the full tree must never co-reside.
+
+        Synchronous; commits with the same atomic tmp → rename (+ ``.old``
+        crash window) as :meth:`save`.  ``restore`` imposes structure from
+        its *template* (the stored treedef string is informational), so
+        ``treedef`` may be a placeholder."""
+        self.wait()
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        leaf_meta = []
+        for name, arr in leaves:
+            arr = np.asarray(arr)
+            self._write_leaf(tmp, name, arr)
+            leaf_meta.append(
+                {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            )
+        meta = {
+            "step": int(step),
+            "treedef": treedef,
+            "leaves": leaf_meta,
+            "time": time.time(),
+        }
+        if extra_meta:
+            meta["extra"] = dict(extra_meta)
+        with open(tmp / "meta.json", "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        self._commit(step, tmp)
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -214,6 +279,39 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def load_meta(self, step: Optional[int] = None) -> dict:
+        """The stored ``meta.json`` of ``step`` (default: latest) — leaf
+        names/shapes/dtypes plus any ``extra`` the writer recorded."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return json.loads(
+            (self.dir / f"step_{step:08d}" / "meta.json").read_text()
+        )
+
+    def load_leaf(
+        self,
+        step: int,
+        name: str,
+        *,
+        dtype: Optional[str] = None,
+        mmap: bool = False,
+    ) -> np.ndarray:
+        """One stored leaf by name.  ``mmap=True`` maps it read-only — the
+        resharder's bounded-memory read path.  ``dtype`` (from
+        :meth:`load_meta`) re-views extension dtypes the way
+        :meth:`restore` does."""
+        arr = np.load(
+            self.dir / f"step_{step:08d}" / f"{name}.npy",
+            mmap_mode="r" if mmap else None,
+        )
+        if arr.dtype.kind == "V" and dtype is not None:
+            import jax.numpy as jnp
+
+            arr = arr.view(jnp.dtype(dtype))
+        return arr
 
     def restore(
         self,

@@ -74,6 +74,7 @@ models the disk tier's (slower) link the same way.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import queue
 import threading
 import time
@@ -84,6 +85,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+
+log = logging.getLogger("repro.engine")
 
 __all__ = [
     "LinkModel",
@@ -201,6 +204,20 @@ class EngineConfig:
     disk_max_slots: int = 8
     disk_wait_eps_s: float = 100e-6
     disk_shrink_after: int = 4
+    # -- robustness (self-healing streamed runtime) -------------------------
+    #: attempts per transfer operation (H2D put, D2H get, disk stage);
+    #: 1 = fail fast (the historical behaviour).  Retried operations re-read
+    #: their intact cold home (host arrays / mapped chunk bytes), so a
+    #: schedule that retried is bitwise-equal to one that did not.
+    max_attempts: int = 1
+    #: base of the exponential backoff between attempts (attempt ``k``
+    #: sleeps ``retry_backoff_s * 2**k``); the clean path never sleeps
+    retry_backoff_s: float = 1e-3
+    #: per-worker join timeout in ``close()`` before the thread counts as
+    #: leaked (surfaced on ``TransferEngine.leaked_threads``)
+    close_timeout_s: float = 5.0
+    #: CRC-verify spill-store chunk bytes in the disk stage before packing
+    verify_spill: bool = True
 
 
 def static_auto_distance(n_chunks: int, cap: int = 4) -> int:
@@ -261,6 +278,14 @@ class AdaptiveDistance:
                 self.distance -= 1
                 self._clean = 0
                 self._just_shrank = True
+        return self.distance
+
+    def boost(self, n: int = 1) -> int:
+        """Externally widen the window (straggler feedback): a flagged slow
+        step is treated like an observed stall without waiting for one."""
+        self.distance = min(self.distance + max(1, n), self.max_distance)
+        self._clean = 0
+        self._just_shrank = False
         return self.distance
 
 
@@ -550,6 +575,16 @@ class ShardedGroupLayout:
 # ---------------------------------------------------------------------------
 
 
+def _retryable(e: BaseException) -> bool:
+    """Faults the bounded-retry loops may absorb.  Corruption is excluded:
+    its recovery path (re-read, durable-home rewrite) already ran inside
+    :func:`repro.core.spillstore.verify_disk_leaf`, and retrying would just
+    re-consume the same bad bytes."""
+    from repro.core.spillstore import SpillCorruptionError
+
+    return not isinstance(e, (KeyboardInterrupt, SystemExit, SpillCorruptionError))
+
+
 class TransferFuture:
     """Handle to one in-flight H2D group transfer."""
 
@@ -563,6 +598,7 @@ class TransferFuture:
         "disk_requests",
         "disk_nbytes",
         "disk_wait_s",
+        "retries",
         "_event",
         "_flat",
         "_device_tree",
@@ -585,6 +621,8 @@ class TransferFuture:
         #: time the *transfer worker* blocked on the disk stage (stage-2-on-
         #: stage-1 stall; zero when the disk read-ahead window covers it)
         self.disk_wait_s = 0.0
+        #: transient faults absorbed while staging this group (both stages)
+        self.retries = 0
         self._event = threading.Event()
         self._flat = None
         self._device_tree = None
@@ -634,8 +672,8 @@ class _DiskFetchTicket:
     before packing, then releases the buffer back to the pool.
     """
 
-    __slots__ = ("sig", "idx", "n_requests", "nbytes", "_event", "_error",
-                 "views", "buf", "ready_at")
+    __slots__ = ("sig", "idx", "n_requests", "nbytes", "retries", "_event",
+                 "_error", "views", "buf", "ready_at")
 
     def __init__(self, sig: tuple, idx: list, n_requests: int, nbytes: int):
         self.sig = sig
@@ -643,6 +681,8 @@ class _DiskFetchTicket:
         self.idx = idx
         self.n_requests = n_requests
         self.nbytes = nbytes
+        #: transient disk-stage faults absorbed for this fetch
+        self.retries = 0
         self._event = threading.Event()
         self._error: Optional[BaseException] = None
         self.views: Optional[list] = None
@@ -651,12 +691,15 @@ class _DiskFetchTicket:
 
 
 class _WritebackTicket:
-    __slots__ = ("index", "n_requests", "nbytes", "_event", "_host", "_error", "ready_at")
+    __slots__ = ("index", "n_requests", "nbytes", "retries", "_event", "_host",
+                 "_error", "ready_at")
 
     def __init__(self, index: int, n_requests: int, nbytes: int):
         self.index = index
         self.n_requests = n_requests
         self.nbytes = nbytes
+        #: transient D2H faults absorbed for this writeback
+        self.retries = 0
         self._event = threading.Event()
         self._host = None
         self._error: Optional[BaseException] = None
@@ -715,6 +758,36 @@ class TransferEngine:
         self.disk_staging_allocs: int = 0
         #: the (emulated) disk is its own serial resource
         self._disk_link_lock = threading.Lock()
+        #: True when the last close() abandoned a live worker thread
+        #: (failed join) — tests assert clean shutdown through this
+        self.leaked_threads: bool = False
+        #: executor AdaptiveDistance controllers fed by this engine, so
+        #: external signals (straggler events) can widen every window
+        self._controllers: list[AdaptiveDistance] = []
+
+    # -- external window control --------------------------------------------
+    def register_controller(self, ctrl: AdaptiveDistance) -> None:
+        """Attach an executor's prefetch controller to this engine (the
+        executor registers itself); :meth:`widen` then reaches it."""
+        if ctrl not in self._controllers:
+            self._controllers.append(ctrl)
+
+    def widen(self, n: int = 1) -> list[int]:
+        """Widen every registered prefetch window (and the disk read-ahead
+        window) by ``n``.  The driver calls this on straggler events: a slow
+        step buys more transfer overlap instead of only a log line.  Returns
+        the new window sizes (observability)."""
+        out = [c.boost(n) for c in self._controllers]
+        with self._disk_cond:
+            if self._disk_controller is not None:
+                self._disk_window = self._disk_controller.boost(n)
+            else:
+                self._disk_window = min(
+                    self._disk_window + max(1, n), self.config.disk_max_slots
+                )
+            out.append(self._disk_window)
+            self._disk_cond.notify_all()
+        return out
 
     # -- lifecycle -----------------------------------------------------------
     def _ensure_worker(self) -> None:
@@ -737,16 +810,39 @@ class TransferEngine:
         workers, so close() is "quiesce", matching the driver's restart loop
         (close at shutdown, resurrect transparently if reused).  Pending
         tasks — including in-flight disk fetches — drain before the workers
-        exit, so no future is left unset."""
+        exit, so no future is left unset.
+
+        A worker that fails to join within ``close_timeout_s`` is *leaked*,
+        not silently forgotten: it is logged loudly, surfaced on
+        ``leaked_threads``, and its reference is kept so a later submit
+        cannot start a duplicate consumer on the same queue."""
+        timeout = self.config.close_timeout_s
         if self._disk_worker is not None and self._disk_worker.is_alive():
             self._disk_tasks.put(None)
         if self._worker is not None and self._worker.is_alive():
             self._tasks.put(None)
-            self._worker.join(timeout=5.0)
+            self._worker.join(timeout=timeout)
         if self._disk_worker is not None and self._disk_worker.is_alive():
-            self._disk_worker.join(timeout=5.0)
-        self._worker = None
-        self._disk_worker = None
+            self._disk_worker.join(timeout=timeout)
+        leaked = [
+            t.name
+            for t in (self._worker, self._disk_worker)
+            if t is not None and t.is_alive()
+        ]
+        self.leaked_threads = bool(leaked)
+        if leaked:
+            log.error(
+                "TransferEngine.close(): worker thread(s) %s still alive "
+                "after a %.1fs join — leaked (wedged transfer?); keeping "
+                "their references so a later submit cannot spawn a "
+                "duplicate consumer on the same queue",
+                leaked,
+                timeout,
+            )
+        if self._worker is not None and not self._worker.is_alive():
+            self._worker = None
+        if self._disk_worker is not None and not self._disk_worker.is_alive():
+            self._disk_worker = None
 
     def __enter__(self) -> "TransferEngine":
         return self
@@ -991,6 +1087,28 @@ class TransferEngine:
         return n
 
     # -- worker thread -------------------------------------------------------
+    def _retry_loop(self, op, counter, what: str):
+        """Run ``op()`` with bounded retry + exponential backoff.
+
+        A transient fault re-runs ``op`` from its intact inputs (host
+        arrays, disk staging views), incrementing ``counter.retries``;
+        attempt exhaustion (or a non-retryable fault) re-raises so the
+        waiter sees the permanent error."""
+        attempts = max(1, self.config.max_attempts)
+        for attempt in range(attempts):
+            try:
+                return op()
+            except BaseException as e:  # noqa: BLE001 — bounded, re-raised
+                if attempt + 1 >= attempts or not _retryable(e):
+                    raise
+                counter.retries += 1
+                log.warning(
+                    "transient %s fault (attempt %d/%d), backing off: %s",
+                    what, attempt + 1, attempts, e,
+                )
+                _sleep_precise(self.config.retry_backoff_s * (2.0 ** attempt))
+        raise AssertionError("unreachable")  # pragma: no cover
+
     def _worker_loop(self) -> None:
         link = self.config.link
         while True:
@@ -1016,6 +1134,7 @@ class TransferEngine:
                                 _sleep_precise(residual)
                             fut.disk_wait_s = time.perf_counter() - t0
                             self._observe_disk_wait(fut.disk_wait_s)
+                            fut.retries += ticket.retries
                             src_leaves = list(src_leaves)
                             for i, view in zip(ticket.idx, ticket.views):
                                 src_leaves[i] = view
@@ -1023,13 +1142,13 @@ class TransferEngine:
                         try:
                             layout = fut.layout
                             if layout.has_payload:
-                                staging = self._acquire_staging(sig, layout)
-                                layout.pack_into(src_leaves, staging)
-                                flat = layout.put_staged(staging)
-                                jax.block_until_ready(flat)
-                                if not layout.any_alias(flat, staging):
-                                    # the device holds its own copy: recycle now
-                                    self._release_staging(sig, staging)
+                                # the disk buffer is held across attempts
+                                # (src_leaves view into it), so a retried
+                                # pack re-reads intact staged bytes
+                                flat = self._retry_loop(
+                                    lambda: self._put_coalesced(sig, layout, src_leaves),
+                                    fut, f"H2D (group {fut.index})",
+                                )
                             else:  # everything already device-resident
                                 flat = None
                         finally:
@@ -1040,23 +1159,18 @@ class TransferEngine:
                         ready_at = self._emulate(link, fut.n_requests, fut.nbytes)
                         fut._complete(flat=flat, ready_at=ready_at)
                     else:
-                        if shardings is not None:
-                            # per-leaf fallback under explicit placements:
-                            # one device_put per leaf (None -> default)
-                            leaves, treedef = jax.tree.flatten(group)
-                            tree = jax.tree.unflatten(treedef, [
-                                jax.device_put(x, s) if s is not None
-                                else (x if isinstance(x, jax.Array) else jax.device_put(x))
-                                for x, s in zip(leaves, shardings)
-                            ])
-                        else:
-                            tree = jax.device_put(group)
-                        jax.block_until_ready(tree)
+                        tree = self._retry_loop(
+                            lambda: self._put_per_leaf(group, shardings),
+                            fut, f"H2D per-leaf (group {fut.index})",
+                        )
                         ready_at = self._emulate(link, fut.n_requests, fut.nbytes)
                         fut._complete(device_tree=tree, ready_at=ready_at)
                 elif kind == "d2h":
                     _, ticket, group_out = task
-                    host = jax.device_get(group_out)
+                    host = self._retry_loop(
+                        lambda: jax.device_get(group_out),
+                        ticket, f"D2H (group {ticket.index})",
+                    )
                     ready_at = self._emulate(link, ticket.n_requests, ticket.nbytes)
                     ticket.ready_at = ready_at
                     ticket._host = host
@@ -1066,36 +1180,87 @@ class TransferEngine:
                 obj._error = e
                 obj._event.set()
 
+    def _put_coalesced(self, sig: tuple, layout, src_leaves):
+        """One attempt of the coalesced H2D: stage, put, block.  On a fault
+        the staging buffer is dropped, not recycled — a half-issued put may
+        still alias it; the pool reallocates on the next attempt."""
+        staging = self._acquire_staging(sig, layout)
+        layout.pack_into(src_leaves, staging)
+        flat = layout.put_staged(staging)
+        jax.block_until_ready(flat)
+        if not layout.any_alias(flat, staging):
+            # the device holds its own copy: recycle now
+            self._release_staging(sig, staging)
+        return flat
+
+    def _put_per_leaf(self, group, shardings):
+        """One attempt of the per-leaf fallback H2D."""
+        if shardings is not None:
+            # per-leaf fallback under explicit placements:
+            # one device_put per leaf (None -> default)
+            leaves, treedef = jax.tree.flatten(group)
+            tree = jax.tree.unflatten(treedef, [
+                jax.device_put(x, s) if s is not None
+                else (x if isinstance(x, jax.Array) else jax.device_put(x))
+                for x, s in zip(leaves, shardings)
+            ])
+        else:
+            tree = jax.device_put(group)
+        jax.block_until_ready(tree)
+        return tree
+
     # -- disk worker thread (pipeline stage 1) ------------------------------
     def _disk_worker_loop(self) -> None:
+        from repro.core.spillstore import verify_disk_leaf
+
         link = self.config.disk_link
         while True:
             task = self._disk_tasks.get()
             if task is None:
                 return
             ticket, disk_leaves = task
-            buf = None
-            try:
-                layout = self._disk_layouts[ticket.sig]
-                buf = self._acquire_disk_staging(ticket.sig, layout)
-                # the copy out of the memory-mapped view IS the disk read
-                layout.pack_into(disk_leaves, buf)
-                views = [
-                    buf[o : o + nb].view(dt).reshape(shape)
-                    for _, o, shape, dt, nb in layout.metas
-                ]
-                ticket.ready_at = self._emulate(
-                    link, ticket.n_requests, ticket.nbytes,
-                    lock=self._disk_link_lock,
-                )
-                ticket.views = views
-                ticket.buf = buf
-                ticket._event.set()
-            except BaseException as e:  # noqa: BLE001 — surface on stage 2
-                if buf is not None:
-                    self._release_disk_staging(ticket.sig, buf)
-                ticket._error = e
-                ticket._event.set()
+            attempts = max(1, self.config.max_attempts)
+            for attempt in range(attempts):
+                buf = None
+                try:
+                    layout = self._disk_layouts[ticket.sig]
+                    if self.config.verify_spill:
+                        # CRC-check the mapped chunk bytes before consuming
+                        # them; a mismatch re-fetches from the durable home
+                        # or surfaces a rich SpillCorruptionError — corrupt
+                        # bytes never reach the optimizer
+                        disk_leaves = [verify_disk_leaf(x) for x in disk_leaves]
+                    buf = self._acquire_disk_staging(ticket.sig, layout)
+                    # the copy out of the memory-mapped view IS the disk read
+                    layout.pack_into(disk_leaves, buf)
+                    views = [
+                        buf[o : o + nb].view(dt).reshape(shape)
+                        for _, o, shape, dt, nb in layout.metas
+                    ]
+                    ticket.ready_at = self._emulate(
+                        link, ticket.n_requests, ticket.nbytes,
+                        lock=self._disk_link_lock,
+                    )
+                    ticket.views = views
+                    ticket.buf = buf
+                    ticket._event.set()
+                    break
+                except BaseException as e:  # noqa: BLE001 — retry or surface
+                    if buf is not None:
+                        # give the window slot back between attempts or the
+                        # read-ahead throttle counts phantom buffers
+                        self._release_disk_staging(ticket.sig, buf)
+                    if attempt + 1 >= attempts or not _retryable(e):
+                        ticket._error = e
+                        ticket._event.set()
+                        break
+                    ticket.retries += 1
+                    log.warning(
+                        "transient disk-stage fault (attempt %d/%d), "
+                        "backing off: %s",
+                        attempt + 1, attempts, e,
+                    )
+                    _sleep_precise(self.config.retry_backoff_s * (2.0 ** attempt))
 
     def _emulate(
         self,

@@ -89,6 +89,12 @@ class StreamStats:
     #: time the *transfer worker* (stage 2) blocked on disk fetches; zero
     #: once the disk read-ahead window hides the disk latency
     disk_wait_s: float = 0.0
+    # -- robustness (EngineConfig.max_attempts retry) -----------------------
+    #: transient transfer faults absorbed by retry (H2D, D2H, disk stage);
+    #: equals the injected fault count in the fault-injection benches
+    retries: int = 0
+    #: transfers that exhausted ``max_attempts`` (the error surfaced)
+    give_ups: int = 0
     #: per-group compute-thread stall (the wait histogram's raw samples);
     #: bounded so a stats object shared across a long training run does not
     #: grow with step count — old samples age out, aggregates stay exact
@@ -300,6 +306,9 @@ class HostStreamExecutor:
                     wait_eps_s=cfg.wait_eps_s,
                     shrink_after=cfg.shrink_after,
                 )
+                # external signals (straggler events via engine.widen())
+                # reach this window too
+                self._engine.register_controller(self._controller)
             controller = self._controller
             distance = controller.distance
         else:
@@ -337,18 +346,34 @@ class HostStreamExecutor:
             st.peak_inflight_bytes = max(st.peak_inflight_bytes, live_bytes)
             return fut
 
+        #: writeback tickets issued this run (retry accounting at drain)
+        wb_tickets: list = []
+
+        def waited(fut) -> float:
+            """fut.wait() plus retry/give-up accounting: absorbed transient
+            faults land in ``st.retries``; a surfaced (permanent) fault
+            counts one give-up and re-raises to the caller."""
+            try:
+                w = fut.wait()
+            except BaseException:
+                st.retries += fut.retries
+                st.give_ups += 1
+                raise
+            st.retries += fut.retries
+            return w
+
         if mode == "eager":
             # bulk transfer first — the paper's original kernel invocation
             futs = [submit(i) for i in range(n)]
             for fut in futs:
-                w = fut.wait()
+                w = waited(fut)
                 st.transfer_wait_s += w
                 st.wait_per_group.append(w)
                 st.disk_wait_s += fut.disk_wait_s
                 st.disk_wait_per_group.append(fut.disk_wait_s)
             t0 = time.perf_counter()
             for i, fut in enumerate(futs):
-                carry = self._step(i, carry, fut.group(), outs, st)
+                carry = self._step(i, carry, fut.group(), outs, st, wb_tickets)
                 live_bytes -= fut.nbytes
             jax.block_until_ready(carry)
             st.compute_s += time.perf_counter() - t0
@@ -363,7 +388,7 @@ class HostStreamExecutor:
                 fut = inflight.pop(i)
                 # the paper's blocking fetch: the core stalls until data
                 # lands (zero once the window covers the link latency)
-                w = fut.wait()
+                w = waited(fut)
                 st.transfer_wait_s += w
                 st.wait_per_group.append(w)
                 st.distance_trace.append(distance)
@@ -372,7 +397,7 @@ class HostStreamExecutor:
                 if controller is not None:
                     distance = controller.observe(w)
                 t0 = time.perf_counter()
-                carry = self._step(i, carry, fut.group(), outs, st)
+                carry = self._step(i, carry, fut.group(), outs, st, wb_tickets)
                 live_bytes -= fut.nbytes
                 st.compute_s += time.perf_counter() - t0
             t0 = time.perf_counter()
@@ -381,13 +406,27 @@ class HostStreamExecutor:
 
         if self._writeback and self._engine.config.async_writeback:
             t0 = time.perf_counter()
-            outs = self._engine.drain_writebacks()
+            try:
+                outs = self._engine.drain_writebacks()
+            except BaseException:
+                st.retries += sum(t.retries for t in wb_tickets)
+                st.give_ups += 1
+                raise
+            st.retries += sum(t.retries for t in wb_tickets)
             st.writeback_drain_s += time.perf_counter() - t0
 
         st.total_s = time.perf_counter() - t_start
         return (carry, outs) if self._writeback else (carry, None)
 
-    def _step(self, index: int, carry: Pytree, buf: Pytree, outs: Optional[list], st: StreamStats) -> Pytree:
+    def _step(
+        self,
+        index: int,
+        carry: Pytree,
+        buf: Pytree,
+        outs: Optional[list],
+        st: StreamStats,
+        wb_tickets: Optional[list] = None,
+    ) -> Pytree:
         apply = (
             (lambda c, b: self._apply(index, c, b)) if self._indexed else self._apply
         )
@@ -400,6 +439,8 @@ class HostStreamExecutor:
                 # the next group computes; drained in order after the loop
                 ticket = self._engine.submit_writeback(len(outs), group_out)
                 st.d2h_requests += ticket.n_requests
+                if wb_tickets is not None:
+                    wb_tickets.append(ticket)
                 outs.append(None)  # placeholder — replaced by drain
             else:
                 host_out = jax.device_get(group_out)  # blocking (seed path)

@@ -21,23 +21,42 @@ restore uses (npy would serialize them as raw void).
 Writes are atomic (tmp + rename), so a chunk overwritten while an old
 memmap is still open leaves the old mapping valid (the fd keeps the
 unlinked inode alive) and the next ``get`` sees the new bytes.
+
+Integrity: ``put`` records a CRC32 per leaf (and per chunk) in the
+manifest, and the views ``get`` hands out carry their provenance
+(:class:`SpillView`), so the transfer engine's disk stage can verify the
+mapped bytes right before consuming them (:func:`verify_disk_leaf`).  A
+mismatch is re-read once, then re-fetched from the chunk's durable home via
+the store's ``recovery`` callback, and only then surfaces as a rich
+:class:`SpillCorruptionError` — corrupt bytes are never silently fed into
+the optimizer.
 """
 from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import os
 import re
 import shutil
 import threading
+import zlib
 from pathlib import Path
-from typing import Any, Iterator, Optional
+from typing import Any, Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["SpillStore", "is_disk_leaf"]
+__all__ = [
+    "SpillStore",
+    "SpillView",
+    "SpillCorruptionError",
+    "is_disk_leaf",
+    "verify_disk_leaf",
+]
+
+log = logging.getLogger("repro.spillstore")
 
 Pytree = Any
 
@@ -68,6 +87,106 @@ def is_disk_leaf(x: Any) -> bool:
     return isinstance(x, np.memmap)
 
 
+class SpillCorruptionError(RuntimeError):
+    """A chunk's bytes no longer match their manifest CRC32.
+
+    Raised on *fetch* (never after the bytes were consumed) with enough
+    provenance — chunk key, file, leaf index, byte range, both checksums —
+    to locate the bad bytes on disk."""
+
+    def __init__(
+        self,
+        key: str,
+        file: str,
+        leaf_index: int,
+        offset: int,
+        nbytes: int,
+        expected: int,
+        actual: int,
+    ) -> None:
+        self.key = key
+        self.file = str(file)
+        self.leaf_index = leaf_index
+        self.offset = offset
+        self.nbytes = nbytes
+        self.expected = expected
+        self.actual = actual
+        super().__init__(
+            f"spill chunk {key!r} corrupt: leaf {leaf_index} at offset "
+            f"{offset} ({nbytes} bytes) of {self.file} has crc32 "
+            f"{actual:#010x}, manifest says {expected:#010x}"
+        )
+
+
+class SpillView(np.memmap):
+    """A chunk leaf view carrying its provenance (store, chunk key, leaf
+    index, byte range, manifest CRC) so fetch-time verification can find
+    the checksum for the bytes it is about to consume.
+
+    Derived arrays (slices, dtype views) inherit the provenance of the
+    full-leaf view they came from; :func:`verify_disk_leaf` only checks
+    views that still cover the whole leaf (``spill_nbytes``)."""
+
+    _SPILL_ATTRS = (
+        "spill_store",
+        "spill_key",
+        "spill_leaf",
+        "spill_offset",
+        "spill_nbytes",
+        "spill_crc32",
+        "spill_base",
+    )
+
+    def __array_finalize__(self, obj):
+        super().__array_finalize__(obj)
+        for a in self._SPILL_ATTRS:
+            if getattr(self, a, None) is None:
+                setattr(self, a, getattr(obj, a, None))
+
+
+def verify_disk_leaf(leaf: Any) -> Any:
+    """CRC-check one fetched leaf view against its manifest checksum.
+
+    The engine's disk stage calls this right before the staging copy (the
+    second pass over page-cache-hot bytes costs memcpy speed).  Leaves
+    without provenance — plain memmaps, partial views, chunks written
+    before CRCs existed — pass through unverified.
+
+    On a mismatch: re-read once (transient corruption heals), then give the
+    store's ``recovery`` callback one shot at rewriting the chunk from its
+    durable home, and only then raise :class:`SpillCorruptionError`.
+    """
+    crc = getattr(leaf, "spill_crc32", None)
+    store = getattr(leaf, "spill_store", None)
+    base = getattr(leaf, "spill_base", None)
+    if crc is None or store is None or base is None:
+        return leaf
+    o, n = leaf.spill_offset, leaf.spill_nbytes
+    if n != leaf.size * leaf.dtype.itemsize:
+        return leaf  # partial view: a whole-leaf CRC cannot attribute it
+    if zlib.crc32(base[o : o + n]) == crc:
+        return leaf
+    actual = zlib.crc32(base[o : o + n])  # one re-read before declaring rot
+    if actual == crc:
+        return leaf
+    store.crc_failures += 1
+    err = SpillCorruptionError(
+        leaf.spill_key,
+        getattr(leaf, "filename", None) or "<unlinked>",
+        leaf.spill_leaf,
+        o,
+        n,
+        crc,
+        actual,
+    )
+    log.error("%s", err)
+    try:
+        fresh = store.recover(leaf.spill_key)
+    except KeyError:
+        raise err from None
+    return jax.tree.leaves(fresh)[leaf.spill_leaf]
+
+
 class SpillStore:
     """Chunk-granular pytree spill store backed by mmap'd binary files.
 
@@ -78,24 +197,41 @@ class SpillStore:
     """
 
     def __init__(
-        self, directory: "str | os.PathLike", *, ephemeral: bool = False
+        self,
+        directory: "str | os.PathLike",
+        *,
+        ephemeral: bool = False,
+        recovery: Optional[Callable[[str], Pytree]] = None,
     ) -> None:
         """``ephemeral=True`` marks a store whose contents only matter for
         the lifetime of this process (a run-private spill of recomputable
         state): ``close()`` deletes the directory, and ``put`` skips the
         durability work (per-chunk fsync, per-put manifest flush — the
-        manifest is kept in memory and written once on a durable close)."""
+        manifest is kept in memory and written once on a durable close).
+
+        ``recovery`` maps a chunk key to a rebuilt pytree from the chunk's
+        *durable* home (checkpoint leaves, recomputation); it is the one
+        re-fetch a CRC mismatch gets before the error surfaces."""
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.ephemeral = ephemeral
         self._lock = threading.Lock()
         self._treedefs: dict[str, Any] = {}
+        self._recovery = recovery
         mpath = self.dir / _MANIFEST
         self._manifest: dict[str, Any] = (
             json.loads(mpath.read_text()) if mpath.exists() else {}
         )
         #: bytes written / read-mapped (observability; benchmarks report it)
         self.bytes_written: int = 0
+        #: CRC mismatches detected on fetch / chunks rewritten from their
+        #: durable home (observability; the recovery bench gates on these)
+        self.crc_failures: int = 0
+        self.recoveries: int = 0
+
+    def set_recovery(self, fn: Optional[Callable[[str], Pytree]]) -> None:
+        """Register (or clear) the durable-home rebuild callback."""
+        self._recovery = fn
 
     # ------------------------------------------------------------------ write
     def put(self, key: str, tree: Pytree) -> None:
@@ -118,19 +254,30 @@ class SpillStore:
             off = _align(off + a.nbytes)
         path = self.dir / _fname(key)
         tmp = path.with_suffix(".tmp")
+        chunk_crc = 0
         with open(tmp, "wb") as f:
             pos = 0
             for meta, a in zip(metas, arrays):
                 f.write(b"\0" * (meta["offset"] - pos))
                 # tobytes, not memoryview: extension dtypes (bfloat16) do
                 # not implement the buffer protocol
-                f.write(np.ascontiguousarray(a).tobytes())
+                data = np.ascontiguousarray(a).tobytes()
+                # checksum exactly the bytes written, so fetch-time
+                # verification can recompute from the raw mapped range
+                meta["crc32"] = zlib.crc32(data)
+                chunk_crc = zlib.crc32(data, chunk_crc)
+                f.write(data)
                 pos = meta["offset"] + meta["nbytes"]
             if not self.ephemeral:
                 f.flush()
                 os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic commit; old memmaps stay valid
-        entry = {"file": path.name, "total_bytes": off, "leaves": metas}
+        entry = {
+            "file": path.name,
+            "total_bytes": off,
+            "crc32": chunk_crc,
+            "leaves": metas,
+        }
         with self._lock:
             self._treedefs[key] = treedef
             changed = self._manifest.get(key) != entry
@@ -169,12 +316,24 @@ class SpillStore:
             else np.empty((0,), np.uint8)
         )
         views = []
-        for meta in entry["leaves"]:
+        for i, meta in enumerate(entry["leaves"]):
             o, n = meta["offset"], meta["nbytes"]
             # jnp.dtype resolves extension dtypes (bfloat16, fp8) that plain
             # np.dtype does not know — the checkpoint-restore re-view trick
             dt = jnp.dtype(meta["dtype"])
-            views.append(mm[o : o + n].view(dt).reshape(meta["shape"]))
+            v = mm[o : o + n].view(dt).reshape(meta["shape"])
+            if n and meta.get("crc32") is not None:
+                # attach provenance so fetch-time CRC verification can find
+                # the checksum (and the raw byte range) for this leaf
+                v = v.view(SpillView)
+                v.spill_store = self
+                v.spill_key = key
+                v.spill_leaf = i
+                v.spill_offset = o
+                v.spill_nbytes = n
+                v.spill_crc32 = meta["crc32"]
+                v.spill_base = mm
+            views.append(v)
         treedef = self._treedefs.get(key)
         if treedef is None and template is not None:
             treedef = jax.tree.structure(template)
@@ -191,6 +350,43 @@ class SpillStore:
     def read(self, key: str, template: Optional[Pytree] = None) -> Pytree:
         """Materialized (plain ndarray) copy of a chunk — a full disk read."""
         return jax.tree.map(np.array, self.get(key, template))
+
+    # -------------------------------------------------------------- integrity
+    def verify_chunk(self, key: str) -> None:
+        """Recompute every leaf CRC of ``key`` from the chunk file; raises
+        :class:`SpillCorruptionError` at the first mismatch.  Chunks written
+        before CRCs existed (no ``crc32`` in the manifest) pass vacuously."""
+        entry = self._entry(key)
+        if not entry["total_bytes"]:
+            return
+        mm = np.memmap(self.dir / entry["file"], dtype=np.uint8, mode="r")
+        for i, meta in enumerate(entry["leaves"]):
+            expected = meta.get("crc32")
+            if expected is None or not meta["nbytes"]:
+                continue
+            o, n = meta["offset"], meta["nbytes"]
+            actual = zlib.crc32(mm[o : o + n])
+            if actual != expected:
+                self.crc_failures += 1
+                raise SpillCorruptionError(
+                    key, entry["file"], i, o, n, expected, actual
+                )
+
+    def recover(self, key: str) -> Pytree:
+        """One re-fetch from the durable home: rewrite ``key`` through the
+        registered ``recovery`` callback and return fresh verified views.
+
+        Raises ``KeyError`` when no recovery source is registered — the
+        caller's :class:`SpillCorruptionError` then stands, and the driver's
+        restart loop (which restores the checkpoint, the *other* durable
+        home) is the recovery path."""
+        if self._recovery is None:
+            raise KeyError(f"no recovery source registered for chunk {key!r}")
+        tree = self._recovery(key)
+        self.put(key, tree)
+        self.recoveries += 1
+        log.warning("spill chunk %r rewritten from its durable home", key)
+        return self.get(key)
 
     # ------------------------------------------------------------- inspection
     def _entry(self, key: str) -> dict:

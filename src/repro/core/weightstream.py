@@ -286,6 +286,17 @@ class WeightStreamPlan:
                 return lpg
         return 1
 
+    def grouping(self) -> list[dict]:
+        """JSON-serializable description of the group partition.  Recorded
+        in checkpoint/run metadata; the elastic resharder compares it (via
+        the group keys, which encode kind + layer bounds) against a
+        restored checkpoint's to decide whether host/disk-homed state must
+        be re-partitioned."""
+        return [
+            {"key": g.key, "kind": g.kind, "lo": g.lo, "hi": g.hi}
+            for g in self.groups
+        ]
+
     # ------------------------------------------------------------- slicing
     def home_group(self, params: Pytree, g: WeightGroup) -> Pytree:
         """The group's slice of a *full* param tree (views, no copies)."""

@@ -20,7 +20,6 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.data.loader import PrefetchLoader
 from repro.data.synthetic import SyntheticConfig, synthetic_batch
-from repro.launch.mesh import make_local_mesh
 from repro.optim.adamw import AdamWConfig
 from repro.parallel import sharding as sh
 from repro.runtime.driver import DriverConfig, TrainDriver
@@ -50,6 +49,7 @@ def build_trainer(
     param_kind: str = "device",
     device_budget_mb=None,
     param_layers_per_group=None,
+    transfer_retries: int = 1,
 ):
     """Assemble (driver, jitted step) for a config on a mesh.
 
@@ -80,10 +80,20 @@ def build_trainer(
     ``device_budget_mb`` bounding peak streamed device residency — models
     of arbitrarily large size under an explicit device budget.  This path
     subsumes ``--stream-opt`` (the moments ride the same groups).
+
+    ``transfer_retries`` sets the engine's transient-fault budget
+    (``EngineConfig.max_attempts``): H2D/D2H/disk-stage faults retry with
+    exponential backoff before surfacing, re-fetching from the intact cold
+    home — retried schedules stay bitwise-equal.
+
+    Resuming a weight-streamed run is **elastic**: the launcher fingerprints
+    the mesh into every checkpoint, and when the latest checkpoint's weight
+    grouping no longer matches the (re-derived) plan it is re-partitioned
+    in place by streaming (``repro.runtime.elastic``) before restore.
     """
     from repro.core import memkind as mk
     from repro.core import spillstore as st_mod
-    from repro.core.engine import TransferEngine
+    from repro.core.engine import EngineConfig, TransferEngine
     from repro.core.hoststream import StreamStats
     from repro.core.refspec import PrefetchSpec
     from repro.core.spillstore import SpillStore
@@ -139,7 +149,6 @@ def build_trainer(
 
     log = logging.getLogger("repro.train")
     if param_kind != "device":
-        from repro.core.engine import EngineConfig
         from repro.core.weightstream import PARAM_KINDS, WeightStreamPlan
 
         if param_kind not in PARAM_KINDS:
@@ -169,7 +178,10 @@ def build_trainer(
             plan.max_distance_for_budget(),
         )
         engine = TransferEngine(
-            EngineConfig(max_distance=plan.max_distance_for_budget())
+            EngineConfig(
+                max_distance=plan.max_distance_for_budget(),
+                max_attempts=transfer_retries,
+            )
         )
         param_stats = StreamStats()
         param_store = None
@@ -180,6 +192,22 @@ def build_trainer(
 
                 spill_dir = tempfile.mkdtemp(prefix="repro-spill-wp-")
             param_store = SpillStore(spill_dir, ephemeral=ephemeral)
+
+        from repro.runtime import elastic as el
+
+        run_meta = {
+            "mesh": el.mesh_fingerprint(mesh),
+            "param_kind": param_kind,
+            "weight_groups": plan.grouping(),
+        }
+        # elastic resume: if the latest checkpoint was written under a
+        # different grouping (re-meshed budget, changed group size), stream-
+        # repartition it in place before the driver restores
+        resharded = el.ensure_plan_matches_checkpoint(
+            driver_cfg.checkpoint_dir, plan, mesh=mesh, run_meta=run_meta
+        )
+        if resharded and param_store is not None:
+            el.prune_stale_spill(param_store, plan)
         streamed = st.make_weight_streamed_train_step(
             cfg,
             opt_cfg,
@@ -219,8 +247,13 @@ def build_trainer(
             engine=engine,
             stream_stats=param_stats,
             spill_store=param_store,
+            run_meta=run_meta,
         )
         return driver
+
+    from repro.runtime import elastic as el
+
+    run_meta = {"mesh": el.mesh_fingerprint(mesh), "param_kind": param_kind}
 
     if stream_opt and policy.opt_state.jax_kind == "device":
         log.warning(
@@ -252,7 +285,7 @@ def build_trainer(
         # under a DISK_OPT policy (or a host policy with an explicit
         # spill_dir + budget) groups beyond the host-RAM budget live on
         # disk and stream disk->host->device
-        engine = TransferEngine()
+        engine = TransferEngine(EngineConfig(max_attempts=transfer_retries))
         stream_stats = StreamStats()
         spill_store = None
         use_spill = not policy.opt_state.jax_addressable or (
@@ -329,11 +362,17 @@ def build_trainer(
             engine=engine,
             stream_stats=stream_stats,
             spill_store=spill_store,
+            run_meta=run_meta,
         )
         return driver
 
     driver = TrainDriver(
-        driver_cfg, wrapped_step, loader, init_state, fail_at=fail_at
+        driver_cfg,
+        wrapped_step,
+        loader,
+        init_state,
+        fail_at=fail_at,
+        run_meta=run_meta,
     )
     return driver
 
@@ -406,11 +445,41 @@ def main() -> int:
         help="layers per weight transfer group (default: largest count "
         "fitting --device-budget-mb, else n_layers/4)",
     )
+    ap.add_argument(
+        "--fail-at",
+        default=None,
+        help="comma-separated step numbers at which to inject one failure "
+        "each (chaos testing: exercises restart + restore)",
+    )
+    ap.add_argument(
+        "--max-restarts",
+        type=int,
+        default=3,
+        help="restart budget; the budget resets after checkpoint-every "
+        "consecutive healthy steps",
+    )
+    ap.add_argument(
+        "--transfer-retries",
+        type=int,
+        default=3,
+        help="transfer-engine attempt budget for transient H2D/D2H/disk "
+        "faults (1 = fail fast, legacy behavior)",
+    )
+    ap.add_argument(
+        "--history-out",
+        default=None,
+        help="write the per-step metric history as JSON to this path "
+        "(chaos tests diff loss series across runs bitwise)",
+    )
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(levelname)s %(message)s")
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = make_local_mesh(model=args.model_parallel)
+    # elastic: degrade the model axis instead of asserting when the device
+    # count changed since the job was first launched
+    from repro.runtime.elastic import elastic_local_mesh
+
+    mesh = elastic_local_mesh(model=args.model_parallel)
     opt_cfg = AdamWConfig(
         peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1), total_steps=args.steps
     )
@@ -418,6 +487,12 @@ def main() -> int:
         total_steps=args.steps,
         checkpoint_every=args.checkpoint_every,
         checkpoint_dir=args.checkpoint_dir,
+        max_restarts=args.max_restarts,
+    )
+    fail_at = (
+        {int(s) for s in args.fail_at.split(",") if s.strip()}
+        if args.fail_at
+        else None
     )
     from repro.core import memkind as mk
 
@@ -429,6 +504,7 @@ def main() -> int:
         opt_cfg=opt_cfg,
         driver_cfg=driver_cfg,
         seed=args.seed,
+        fail_at=fail_at,
         policy=mk.get_policy(args.policy),
         stream_opt=args.stream_opt,
         spill_dir=args.spill_dir,
@@ -436,15 +512,21 @@ def main() -> int:
         param_kind=args.param_kind,
         device_budget_mb=args.device_budget_mb,
         param_layers_per_group=args.param_layers_per_group,
+        transfer_retries=args.transfer_retries,
     )
     t0 = time.time()
     driver.run()
     dt = time.time() - t0
+    if args.history_out:
+        import json
+
+        with open(args.history_out, "w") as f:
+            json.dump(driver.history, f)
     losses = [h["loss"] for h in driver.history if "loss" in h]
+    span = f"loss {losses[0]:.3f} -> {losses[-1]:.3f}" if losses else "no new steps"
     print(
         f"trained {args.arch} ({'smoke' if args.smoke else 'full'}) "
-        f"{len(driver.history)} steps in {dt:.1f}s; "
-        f"loss {losses[0]:.3f} -> {losses[-1]:.3f}"
+        f"{len(driver.history)} steps in {dt:.1f}s; {span}"
     )
     return 0
 

@@ -66,6 +66,8 @@ class TrainDriver:
         engine: Optional[Any] = None,  # repro.core.engine.TransferEngine
         stream_stats: Optional[Any] = None,  # repro.core.hoststream.StreamStats
         spill_store: Optional[Any] = None,  # repro.core.spillstore.SpillStore
+        run_meta: Optional[dict] = None,  # mesh fingerprint etc. → checkpoint
+        on_restart: Optional[Callable[[int], None]] = None,  # restart hook
     ) -> None:
         self.cfg = cfg
         self.step_fn = step_fn
@@ -73,9 +75,23 @@ class TrainDriver:
         self.init_state = init_state
         self.fail_at = set(fail_at or ())
         self.ckpt = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep)
-        self.monitor = StragglerMonitor(deadline_s=cfg.step_deadline_s)
+        self.monitor = StragglerMonitor(
+            deadline_s=cfg.step_deadline_s, on_event=self._on_straggler
+        )
         self.history: list[dict] = []
-        self.restarts = 0
+        self.restarts = 0  # cumulative — never decays (observability)
+        #: consecutive healthy steps since the last failure — at
+        #: ``checkpoint_every`` of them the restart *budget* resets
+        #: (``_forgiven`` catches up to ``restarts``), so a long-lived job
+        #: survives more than ``max_restarts`` isolated faults while
+        #: genuine crash loops still trip the budget
+        self._healthy = 0
+        self._forgiven = 0
+        #: run identity saved into every checkpoint's ``extra`` metadata
+        #: (mesh fingerprint, param kind, weight grouping) — the resume
+        #: path reads it back to detect an elastic re-mesh
+        self.run_meta = run_meta
+        self.on_restart = on_restart
         #: transfer engine whose lifecycle this driver owns (closed when the
         #: run finishes or finally fails) — the streamed-optimizer path
         self.engine = engine
@@ -85,10 +101,30 @@ class TrainDriver:
         self.spill_store = spill_store
 
     # ------------------------------------------------------------------ run
+    def _on_straggler(self, ev) -> None:
+        """A straggling step means the compute side stalled — widen the
+        transfer engine's prefetch window so the stream keeps more groups
+        in flight and the recovery step is not also transfer-bound."""
+        if self.engine is not None and hasattr(self.engine, "widen"):
+            widened = self.engine.widen()
+            log.info(
+                "straggler at step %d (%.3fs, z=%.1f): widened prefetch "
+                "distances to %s",
+                ev.step, ev.duration_s, ev.z, widened,
+            )
+
     def _restore_or_init(self) -> tuple[int, Pytree]:
         latest = self.ckpt.latest_step()
         if latest is None:
             return 0, self.init_state()
+        if self.run_meta and self.run_meta.get("mesh"):
+            saved = (self.ckpt.load_meta(latest).get("extra") or {}).get("mesh")
+            if saved and saved != self.run_meta["mesh"]:
+                log.warning(
+                    "elastic re-mesh: checkpoint step %d written on mesh %s, "
+                    "restoring onto %s",
+                    latest, saved, self.run_meta["mesh"],
+                )
         template = jax.eval_shape(self.init_state)
         step, state = self.ckpt.restore(template)
         log.info("restored checkpoint at step %d", step)
@@ -101,14 +137,31 @@ class TrainDriver:
                     return self._run_once()
                 except Exception as e:  # noqa: BLE001 — the restart loop
                     self.restarts += 1
+                    self._healthy = 0
                     log.warning(
                         "step failure (%s); restart %d/%d",
                         e,
-                        self.restarts,
+                        self.restarts - self._forgiven,
                         self.cfg.max_restarts,
                     )
-                    if self.restarts > self.cfg.max_restarts:
+                    if self.restarts - self._forgiven > self.cfg.max_restarts:
                         raise
+                    # a failed step may leave writebacks queued for state
+                    # that restore is about to replace — drop them so the
+                    # drain after restart only sees post-restore tickets
+                    if self.engine is not None and hasattr(
+                        self.engine, "discard_writebacks"
+                    ):
+                        self.engine.discard_writebacks()
+                    if self.run_meta and self.run_meta.get("mesh"):
+                        from repro.runtime import elastic
+
+                        # raises RemeshRequired when the device count moved:
+                        # compiled programs can't re-mesh in-process, the
+                        # relaunch path re-shards streamed state on resume
+                        elastic.check_restart_mesh(self.run_meta["mesh"])
+                    if self.on_restart is not None:
+                        self.on_restart(self.restarts)
         finally:
             if self.stream_stats is not None and self.stream_stats.n_groups:
                 s = self.stream_stats
@@ -151,11 +204,27 @@ class TrainDriver:
                 log.warning("straggler: step %d took %.3fs (z=%.1f)", ev.step, ev.duration_s, ev.z)
             row = {"step": step, **{k: _to_float(v) for k, v in metrics.items()}}
             self.history.append(row)
+            self._healthy += 1
+            if (
+                self.restarts > self._forgiven
+                and self.cfg.checkpoint_every
+                and self._healthy >= self.cfg.checkpoint_every
+            ):
+                log.info(
+                    "%d healthy steps since last failure: restart budget "
+                    "reset (was %d/%d)",
+                    self._healthy,
+                    self.restarts - self._forgiven,
+                    self.cfg.max_restarts,
+                )
+                self._forgiven = self.restarts
             if self.cfg.log_every and step % self.cfg.log_every == 0:
                 log.info("step %d: %s", step, row)
             if self.cfg.checkpoint_every and (step + 1) % self.cfg.checkpoint_every == 0:
-                self.ckpt.save(step, state)
-        self.ckpt.save(self.cfg.total_steps - 1, state, blocking=True)
+                self.ckpt.save(step, state, extra_meta=self.run_meta)
+        self.ckpt.save(
+            self.cfg.total_steps - 1, state, blocking=True, extra_meta=self.run_meta
+        )
         return state
 
 

@@ -13,7 +13,7 @@ import dataclasses
 import statistics
 import time
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 
 @dataclasses.dataclass
@@ -31,10 +31,15 @@ class StragglerMonitor:
         window: int = 50,
         z_threshold: float = 6.0,
         deadline_s: Optional[float] = None,
+        on_event: Optional[Callable[[StragglerEvent], None]] = None,
     ) -> None:
         self.window: deque[float] = deque(maxlen=window)
         self.z_threshold = z_threshold
         self.deadline_s = deadline_s
+        #: called with each flagged event — the driver wires this to
+        #: ``TransferEngine.widen`` so a straggling step buys the stream
+        #: more prefetch headroom instead of just a log line
+        self.on_event = on_event
         self.events: list[StragglerEvent] = []
         self._t0: Optional[float] = None
         self._step = 0
@@ -65,5 +70,7 @@ class StragglerMonitor:
             if z > self.z_threshold:
                 ev = StragglerEvent(self._step, dt, med, z)
                 self.events.append(ev)
+                if self.on_event is not None:
+                    self.on_event(ev)
         self.window.append(dt)
         return ev
