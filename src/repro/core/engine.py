@@ -639,6 +639,14 @@ class TransferFuture:
         self._event.set()
 
     # -- compute side -------------------------------------------------------
+    @property
+    def is_resident(self) -> bool:
+        """True iff this submit moved NOTHING across any link: every leaf
+        was already a committed ``jax.Array`` (device-kind homes, and
+        residency-cache hits) and nothing was disk-staged.  The executors'
+        cache-hit/unique-fetch accounting keys off this."""
+        return self.n_requests == 0 and self.disk_requests == 0
+
     def wait(self) -> float:
         """Block until the transfer has landed; returns the time the compute
         thread actually spent blocked (the paper's stall time)."""

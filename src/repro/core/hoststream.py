@@ -70,6 +70,23 @@ class StreamStats:
     #: the per-(device, group) request invariant, exact even when one run
     #: mixes sharded and default-placement groups
     n_device_groups: int = 0
+    # -- residency accounting (the link-traffic truth) ----------------------
+    #: submits that actually crossed a link (>= 1 H2D or disk request).
+    #: ``requests_per_group`` is a per-PASS invariant and resets its
+    #: denominator with every run, so a step whose forward AND backward each
+    #: re-fetch every group still reads a clean 1.0/group — this counter is
+    #: what benches gate real per-step traffic on instead
+    unique_group_fetches: int = 0
+    #: submits whose group was already device-resident end to end (weight
+    #: residency-cache hits, and device-kind pass-through): zero link bytes
+    cache_hits: int = 0
+    #: submits that had to move bytes (always == unique_group_fetches; kept
+    #: as its own counter so hit-rate reads don't conflate the two views)
+    cache_misses: int = 0
+    #: sum of per-group device counts over *fetched* groups only — the
+    #: denominator that keeps the one-request-per-(device, group) coalescing
+    #: invariant checkable when resident groups pass through at zero requests
+    fetched_device_groups: int = 0
     transfer_wait_s: float = 0.0  # time the *compute* path blocked on data
     compute_s: float = 0.0
     total_s: float = 0.0
@@ -135,6 +152,17 @@ class StreamStats:
                 "requests_per_device_group": (
                     self.h2d_requests / per_dev_groups if per_dev_groups else 0.0
                 ),
+                # the same invariant restricted to groups that actually
+                # fetched — exactly 1.0 under coalescing no matter how many
+                # resident groups passed through at zero requests
+                "requests_per_fetched_device_group": (
+                    self.h2d_requests / self.fetched_device_groups
+                    if self.fetched_device_groups
+                    else 0.0
+                ),
+                "unique_group_fetches": self.unique_group_fetches,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
             },
             "d2h": {
                 "requests": self.d2h_requests,
@@ -277,7 +305,14 @@ class HostStreamExecutor:
         ``group_shardings``: optional per-group shardings (one pytree per
         group, aligned with ``groups``) for runs whose groups have
         heterogeneous layouts; overrides the constructor's broadcast
-        ``device_shardings``."""
+        ``device_shardings``.
+
+        A ``groups`` entry may be a zero-arg callable, resolved when its
+        transfer is SUBMITTED (not when the run was scheduled): the weight
+        streamer's residency-cache substitution must see the cache as it is
+        the moment the fetch would be issued — a group that became resident
+        mid-pass passes through by reference instead of re-crossing the
+        link."""
         if mode not in ("eager", "on_demand", "prefetch"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "prefetch" and prefetch is None:
@@ -331,10 +366,11 @@ class HostStreamExecutor:
 
         def submit(i: int):
             nonlocal live_bytes
+            group = groups[i]() if callable(groups[i]) else groups[i]
             if group_shardings is None:
-                fut = self._submit(i, groups[i])
+                fut = self._submit(i, group)
             else:  # per-group override, authoritative (None = default)
-                fut = self._submit(i, groups[i], group_shardings[i])
+                fut = self._submit(i, group, group_shardings[i])
             st.n_transfers += 1
             st.h2d_requests += fut.n_requests
             st.bytes_h2d += fut.nbytes
@@ -342,6 +378,12 @@ class HostStreamExecutor:
             st.bytes_disk += fut.disk_nbytes
             st.n_devices = max(st.n_devices, fut.n_devices)
             st.n_device_groups += fut.n_devices
+            if fut.is_resident:  # zero link traffic: resident pass-through
+                st.cache_hits += 1
+            else:
+                st.cache_misses += 1
+                st.unique_group_fetches += 1
+                st.fetched_device_groups += fut.n_devices
             live_bytes += fut.nbytes
             st.peak_inflight_bytes = max(st.peak_inflight_bytes, live_bytes)
             return fut

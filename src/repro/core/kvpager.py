@@ -286,6 +286,12 @@ class PageStream:
         stats.disk_wait_per_group.append(fut.disk_wait_s)
         stats.n_devices = max(stats.n_devices, fut.n_devices)
         stats.n_device_groups += fut.n_devices
+        if fut.is_resident:
+            stats.cache_hits += 1
+        else:
+            stats.cache_misses += 1
+            stats.unique_group_fetches += 1
+            stats.fetched_device_groups += fut.n_devices
         if self._auto:
             self._step_waits[rid] = self._step_waits.get(rid, 0.0) + w
         stats.distance_trace.append(self.window(rid))

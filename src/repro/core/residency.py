@@ -1,0 +1,236 @@
+"""Weight-residency group cache: bytes already on the fast tier never
+cross the link again.
+
+The paper's pass-by-reference model says the host service moves *only the
+data the computation needs*; the streamed-weights runtime violated that by
+re-fetching groups it had just held — the backward pass re-fetched every
+group the forward had landed moments earlier, and a serving session
+re-fetched the whole model every decode step even when
+``--device-budget-mb`` had slack.  :class:`ResidencyCache` closes that gap:
+an LRU/pinned cache of **device-resident fetch groups**, scoped to one
+transfer engine's consumers and sized to the budget slack above the
+streaming window (see
+:meth:`repro.core.weightstream.WeightStreamPlan.residency_capacity_bytes`).
+
+A cached group is a pytree of committed ``jax.Array`` leaves.  Re-submitting
+it through :meth:`repro.core.engine.TransferEngine.submit_group` costs ZERO
+H2D requests — the engine's layouts pass ``jax.Array`` leaves through by
+reference — so a hit is simply "hand the engine the cached tree" and every
+downstream consumer (jitted stage programs, stats, shardings) is unchanged.
+
+Three policies keep it correct:
+
+pin / evict
+    entries are LRU-ordered; :meth:`put` evicts least-recently-used
+    *unpinned* entries until the new entry fits, and refuses (leaving the
+    cache unchanged) when it cannot.  :meth:`pin` protects entries across a
+    known turnaround — the streamed train step pins the last K layer groups
+    between the forward and the reverse-order backward so the backward's
+    first K fetches are hits.
+budget accounting
+    ``capacity_bytes`` is a hard byte ceiling (``None`` = unbounded, the
+    no-budget case).  The owner sizes it so streamed window + cached bytes
+    can never exceed the device budget; ``peak_resident_bytes`` is the
+    observable the benches gate against.
+writeback invalidation
+    the streamed optimizer updates params group-wise, so any cached copy of
+    an updated group is STALE the moment the update lands.  :meth:`refresh`
+    replaces the entry in place with the post-update device tree (the same
+    values the D2H drain writes to the home) — or, if the entry cannot be
+    kept, guarantees it is gone.  A step that fails mid-update calls
+    :meth:`clear`: a half-updated cache must never survive into a retry.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Iterable, Optional
+
+import jax
+
+__all__ = ["ResidencyCache"]
+
+Pytree = Any
+
+
+def _tree_nbytes(tree: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+class _Entry:
+    __slots__ = ("tree", "nbytes", "pinned")
+
+    def __init__(self, tree: Pytree, nbytes: int, pinned: bool) -> None:
+        self.tree = tree
+        self.nbytes = nbytes
+        self.pinned = pinned
+
+
+class ResidencyCache:
+    """LRU/pinned cache of device-resident weight fetch groups.
+
+    Single-threaded by design: it is only touched from the compute thread
+    (the executor's submit/apply path), never from the engine worker.
+    """
+
+    def __init__(self, capacity_bytes: Optional[int] = None) -> None:
+        if capacity_bytes is not None and capacity_bytes < 0:
+            raise ValueError(f"capacity_bytes must be >= 0, got {capacity_bytes}")
+        self.capacity_bytes = capacity_bytes
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        self.resident_bytes = 0
+        #: high-water mark of ``resident_bytes`` — the cache's term of the
+        #: device-budget gate (streamed peak + this must stay <= budget)
+        self.peak_resident_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.insertions = 0
+        self.evictions = 0
+        self.invalidations = 0
+        #: puts refused because the entry could not fit (capacity minus
+        #: pinned bytes) — the zero-slack degenerate case counts all here
+        self.refusals = 0
+
+    # ------------------------------------------------------------- queries
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def keys(self) -> Iterable[str]:
+        return self._entries.keys()
+
+    @property
+    def pinned_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values() if e.pinned)
+
+    def lookup(self, key: str) -> Optional[Pytree]:
+        """The cached device tree, or None.  Counts a hit/miss and marks
+        the entry most-recently-used."""
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return e.tree
+
+    def peek(self, key: str) -> Optional[Pytree]:
+        """Like :meth:`lookup` but without touching LRU order or counters —
+        for leaf-level borrowing (the tied head's embed-table dedupe)."""
+        e = self._entries.get(key)
+        return e.tree if e is not None else None
+
+    # ------------------------------------------------------------ mutation
+    def _drop(self, key: str) -> None:
+        e = self._entries.pop(key)
+        self.resident_bytes -= e.nbytes
+
+    def put(
+        self,
+        key: str,
+        tree: Pytree,
+        nbytes: Optional[int] = None,
+        *,
+        pinned: bool = False,
+    ) -> bool:
+        """Insert a landed device group.  Evicts LRU unpinned entries until
+        it fits; returns False (cache unchanged) when it cannot.  A key
+        already present is only touched (and its pin widened) — replacing
+        live values is :meth:`refresh`'s job."""
+        e = self._entries.get(key)
+        if e is not None:
+            self._entries.move_to_end(key)
+            e.pinned = e.pinned or pinned
+            return True
+        if nbytes is None:
+            nbytes = _tree_nbytes(tree)
+        if self.capacity_bytes is not None:
+            evictable = [
+                k for k, v in self._entries.items() if not v.pinned
+            ]  # LRU-first
+            spare = self.capacity_bytes - self.resident_bytes
+            i = 0
+            while spare < nbytes and i < len(evictable):
+                spare += self._entries[evictable[i]].nbytes
+                i += 1
+            if spare < nbytes:
+                self.refusals += 1
+                return False
+            for k in evictable[:i]:
+                self._drop(k)
+                self.evictions += 1
+        self._entries[key] = _Entry(tree, nbytes, pinned)
+        self.resident_bytes += nbytes
+        self.peak_resident_bytes = max(self.peak_resident_bytes, self.resident_bytes)
+        self.insertions += 1
+        return True
+
+    def refresh(self, key: str, tree: Pytree, nbytes: Optional[int] = None) -> bool:
+        """Writeback invalidation: the group's params were just updated, so
+        a cached copy is stale.  Replace it in place with the post-update
+        device tree (bitwise the values the D2H drain re-homes), or insert
+        it if it fits; either way the cache never holds a stale ``key`` on
+        return."""
+        e = self._entries.get(key)
+        if e is not None:
+            pinned = e.pinned
+            self._drop(key)
+            self.invalidations += 1
+            return self.put(key, tree, nbytes, pinned=pinned)
+        return self.put(key, tree, nbytes)
+
+    def invalidate(self, key: str) -> bool:
+        e = self._entries.get(key)
+        if e is None:
+            return False
+        self._drop(key)
+        self.invalidations += 1
+        return True
+
+    def clear(self) -> None:
+        """Drop everything (pins included) — a failed streamed step may
+        have refreshed some groups but not committed the home update, and a
+        half-updated cache must never feed the retried step."""
+        n = len(self._entries)
+        self._entries.clear()
+        self.resident_bytes = 0
+        self.invalidations += n
+
+    # ------------------------------------------------------------- pinning
+    def pin(self, key: str) -> bool:
+        e = self._entries.get(key)
+        if e is None:
+            return False
+        e.pinned = True
+        return True
+
+    def unpin_all(self) -> None:
+        for e in self._entries.values():
+            e.pinned = False
+
+    # -------------------------------------------------------------- stats
+    def counters(self) -> dict:
+        return {
+            "capacity_bytes": self.capacity_bytes,
+            "resident_bytes": self.resident_bytes,
+            "peak_resident_bytes": self.peak_resident_bytes,
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "insertions": self.insertions,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+            "refusals": self.refusals,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - trivial
+        cap = (
+            "unbounded"
+            if self.capacity_bytes is None
+            else f"{self.capacity_bytes / 1e6:.1f}MB"
+        )
+        return (
+            f"ResidencyCache({len(self._entries)} groups, "
+            f"{self.resident_bytes / 1e6:.1f}MB resident, cap {cap})"
+        )

@@ -35,7 +35,12 @@ the sliding-window maximum of ``d + 2`` consecutive fetch-group byte
 counts (``d`` prefetched + 1 landing + 1 being consumed), and
 ``max_distance_for_budget`` caps the adaptive prefetch window so the
 streamed residency can never exceed ``--device-budget-mb`` no matter what
-the controller learns.
+the controller learns.  Both take a ``cached_bytes`` term for the
+:class:`~repro.core.residency.ResidencyCache` that keeps recently fetched
+groups device-resident: window + cached bytes share one budget, and
+``residency_capacity_bytes`` is the slack left above the widest allowed
+window — the cache's byte ceiling (zero slack = cache inert = the plain
+streaming schedule).
 
 Where data lives never changes what is computed: every consumer runs the
 same jitted per-group programs on the same values for every kind, so
@@ -168,6 +173,8 @@ class WeightStreamPlan:
             if self.head_reads_embed
             else 0
         )
+        self.head_home_bytes = head_home_bytes
+        self.embed_table_bytes = embed_table_bytes
         self.head_fetch_bytes = head_home_bytes + embed_table_bytes
         self.total_param_bytes = (
             self.embed_bytes + head_home_bytes + total_block_bytes
@@ -233,25 +240,31 @@ class WeightStreamPlan:
         if g.kind == "embed":
             return self.embed_bytes
         if g.kind == "head":
-            return self.head_fetch_bytes if fetch else (
-                self.head_fetch_bytes
-                - (self.embed_bytes if self.head_reads_embed else 0)
-            )
+            # home bytes exclude the tied embed-table re-read (which is the
+            # embed TABLE, not the whole embed group — vision towers ride
+            # the embed group but are never re-read at the head stage)
+            return self.head_fetch_bytes if fetch else self.head_home_bytes
         return (g.hi - g.lo) * self.per_layer_bytes
 
     def fetch_sequence_bytes(self) -> list[int]:
         """Per-group H2D bytes in forward fetch order."""
         return [self.group_bytes(g) for g in self.groups]
 
-    def peak_device_bytes(self, distance: int) -> int:
+    def peak_device_bytes(self, distance: int, cached_bytes: int = 0) -> int:
         """Streamed-weight residency model: with ``distance`` groups
         prefetched, at most ``distance + 2`` consecutive fetch groups are
         device-resident at once (in flight + landing + being consumed).
         The backward pass walks the same sequence reversed, so the same
-        sliding-window maximum bounds both passes."""
+        sliding-window maximum bounds both passes.
+
+        ``cached_bytes`` adds a residency-cache ceiling on top of the
+        window: cached groups are extra device residency the stream does
+        not see (a cache hit transfers zero bytes, so it never lands in
+        the window term — the sum is a conservative bound, never an
+        undercount)."""
         seq = self.fetch_sequence_bytes()
         w = max(1, distance + 2)
-        return max(
+        return cached_bytes + max(
             sum(seq[i : min(i + w, len(seq))]) for i in range(len(seq))
         )
 
@@ -265,16 +278,37 @@ class WeightStreamPlan:
             distance,
         )
 
-    def max_distance_for_budget(self, cap: int = 8) -> int:
+    def max_distance_for_budget(self, cap: int = 8, cached_bytes: int = 0) -> int:
         """Largest prefetch distance whose modeled peak fits the budget —
         the engine's ``max_distance`` so the adaptive controller can never
-        learn its way past the budget."""
+        learn its way past the budget.  ``cached_bytes`` reserves residency
+        for the group cache: window + cached bytes share the one budget, so
+        a caller pinning cache capacity gets a correspondingly narrower
+        window cap."""
         if self.device_budget_bytes is None:
             return cap
         d = 1
-        while d < cap and self.peak_device_bytes(d + 1) <= self.device_budget_bytes:
+        while (
+            d < cap
+            and self.peak_device_bytes(d + 1, cached_bytes)
+            <= self.device_budget_bytes
+        ):
             d += 1
         return d
+
+    def residency_capacity_bytes(self, cap: int = 8) -> Optional[int]:
+        """Byte ceiling for the weight-residency group cache: the budget
+        slack ABOVE the widest allowed prefetch window, so streaming keeps
+        its latency-optimal window and cached + streamed bytes still can
+        never exceed the budget.  ``None`` (no budget) = unbounded; zero
+        slack = an inert cache = exactly the uncached schedule."""
+        if self.device_budget_bytes is None:
+            return None
+        return max(
+            0,
+            self.device_budget_bytes
+            - self.peak_device_bytes(self.max_distance_for_budget(cap)),
+        )
 
     def _fit_layers_per_group(self, budget: Optional[int]) -> int:
         if budget is None:
@@ -332,19 +366,52 @@ class WeightStreamPlan:
         return out
 
     # ------------------------------------------------------------- fetching
-    def fetch_group(self, home: dict, g: WeightGroup) -> Pytree:
+    def fetch_group(self, home: dict, g: WeightGroup, cache=None) -> Pytree:
         """The pytree actually streamed for a stage.  Identical to the home
         group except the head stage of tied/codebook archs, whose fetch
         group additionally references the embed home leaves (coalesced into
-        the same staging buffer — still ONE H2D request per device)."""
-        tree = home["groups"][g.key]
+        the same staging buffer — still ONE H2D request per device).
+
+        ``cache`` (a :class:`~repro.core.residency.ResidencyCache` keyed by
+        group key, holding device-resident HOME trees) substitutes resident
+        groups in place: a whole-group hit hands back committed
+        ``jax.Array`` leaves that pass through the engine at zero H2D
+        requests.  The tied head's embed-table leaf is borrowed from the
+        resident embed group even on a head miss, so the table's bytes are
+        never re-read across the link while its source group is resident."""
+        tree = cache.lookup(g.key) if cache is not None else None
+        if tree is None:
+            tree = home["groups"][g.key]
         if g.kind == "head" and self.head_reads_embed:
             tree = dict(tree)
-            tree["embed"] = home["groups"][self.groups[0].key]["embed"]
+            emb = cache.peek(self.groups[0].key) if cache is not None else None
+            tree["embed"] = (
+                emb["embed"]
+                if emb is not None
+                else home["groups"][self.groups[0].key]["embed"]
+            )
         return tree
 
-    def fetch_groups_forward(self, home: dict) -> list:
-        return [self.fetch_group(home, g) for g in self.groups]
+    def fetch_groups_forward(self, home: dict, cache=None) -> list:
+        return [self.fetch_group(home, g, cache) for g in self.groups]
+
+    def fetch_thunks_forward(self, home: dict, cache) -> list:
+        """Forward fetch sequence as zero-arg thunks, resolved by the
+        executor at SUBMIT time: residency decisions must see the cache as
+        it is when the transfer would be issued, not when the step was
+        scheduled (the embed group a head fetch wants to borrow from may
+        only become resident mid-pass)."""
+        return [
+            (lambda g=g: self.fetch_group(home, g, cache)) for g in self.groups
+        ]
+
+    def cache_home_tree(self, g: WeightGroup, fetched: Pytree) -> Pytree:
+        """The cacheable HOME part of a landed fetch group: the tied head's
+        borrowed embed-table leaf belongs to the embed group's entry, so it
+        is stripped rather than double-counted (and double-retained)."""
+        if g.kind == "head" and self.head_reads_embed:
+            return {k: fetched[k] for k in self.head_home_keys}
+        return fetched
 
     def split_head_grads(self, dp_head: Pytree) -> tuple[Pytree, Optional[Pytree]]:
         """Split the head *fetch* group's grads into (head-home part, embed

@@ -44,6 +44,7 @@ from repro.core.kvpager import (
     paged_cache_supported,
 )
 from repro.core.refspec import AUTO
+from repro.core.residency import ResidencyCache
 from repro.core.spillstore import SpillStore
 from repro.launch.mesh import make_local_mesh
 from repro.parallel import sharding as sh
@@ -129,6 +130,7 @@ class ServeSession:
         device_budget_mb: Optional[float] = None,
         param_layers_per_group: Optional[int] = None,
         param_distance=AUTO,
+        param_cache_mb: Optional[float] = None,
     ) -> None:
         self.cfg = cfg
         self.mesh = mesh
@@ -159,6 +161,10 @@ class ServeSession:
         # construction validates the budget and can raise)
         self._wplan = None
         engine_cfg = None
+        #: weight-residency group cache — keeps fetched weight groups
+        #: device-resident across prefill/decode steps (serve params are
+        #: immutable, so entries are never invalidated, only LRU-evicted)
+        self.param_residency: Optional[ResidencyCache] = None
         if param_kind != "device":
             from repro.core.engine import EngineConfig
             from repro.core.weightstream import PARAM_KINDS, WeightStreamPlan
@@ -192,20 +198,50 @@ class ServeSession:
                 layers_per_group=param_layers_per_group,
                 device_budget_mb=budget,
             )
+            # weight-residency cache capacity: default = the budget slack
+            # above the widest prefetch window (None budget = unbounded);
+            # an explicit --param-cache-mb instead RESERVES that many bytes,
+            # narrowing the window — which must still fit at distance 1
+            if param_cache_mb is None:
+                cache_cap = self._wplan.residency_capacity_bytes()
+            else:
+                cache_cap = int(param_cache_mb * 1e6)
+                floor = self._wplan.peak_device_bytes(1, cached_bytes=cache_cap)
+                if budget is not None and floor > budget * 1e6:
+                    hot_mb = (device_budget_mb or 0) - budget
+                    raise ValueError(
+                        f"device_budget_mb={device_budget_mb} cannot hold the "
+                        f"KV hot window ({hot_mb:.1f} MB) + the distance-1 "
+                        f"weight stream floor "
+                        f"({self._wplan.peak_device_bytes(1) / 1e6:.1f} MB) + "
+                        f"param_cache_mb={param_cache_mb}; raise the budget, "
+                        "shrink hot_pages/page_len/param_layers_per_group, or "
+                        "lower param_cache_mb"
+                    )
+            cache_reserved = (
+                (cache_cap or 0) if budget is not None else 0
+            )
+            self.param_residency = ResidencyCache(cache_cap)
             engine_cfg = EngineConfig(
-                max_distance=self._wplan.max_distance_for_budget()
+                max_distance=self._wplan.max_distance_for_budget(
+                    cached_bytes=cache_reserved
+                )
             )
             if engine is not None and (
                 budget is not None
                 and engine.config.max_distance
-                > self._wplan.max_distance_for_budget()
+                > self._wplan.max_distance_for_budget(
+                    cached_bytes=cache_reserved
+                )
             ):
                 # an external engine must respect the budget's window cap or
                 # the adaptive controller can stream past the budget
                 raise ValueError(
                     f"external engine's max_distance="
                     f"{engine.config.max_distance} exceeds the device "
-                    f"budget's cap {self._wplan.max_distance_for_budget()}; "
+                    f"budget's cap "
+                    f"{self._wplan.max_distance_for_budget(cached_bytes=cache_reserved)} "
+                    "(window + residency cache share the budget); "
                     "pass an engine configured from the plan (or no engine)"
                 )
         self.plan = sh.make_plan(mesh, mode="serve")
@@ -289,11 +325,13 @@ class ServeSession:
                     cfg, self._wplan, 1, self.max_len, mesh, self.sharder,
                     engine=self._engine, stats=self.param_stats,
                     param_shardings=p_sh, prefetch=param_pf,
+                    residency=self.param_residency,
                 )
                 self._step = st.make_weight_streamed_decode_step(
                     cfg, self._wplan, mesh, self.sharder,
                     engine=self._engine, stats=self.param_stats,
                     param_shardings=p_sh, paged=True, prefetch=param_pf,
+                    residency=self.param_residency,
                 )
             else:
                 self._prefill = jax.jit(
@@ -318,6 +356,10 @@ class ServeSession:
         self.n_steps = 0
         #: per-step compute-blocked transfer wait (steady-state metric)
         self.step_waits: list = []
+        #: per-step UNIQUE weight-group fetches (H2D link traffic, not
+        #: resident pass-throughs) — the residency gate: with cache slack
+        #: this decays to 0 at steady state instead of n_groups every step
+        self.param_step_fetches: list = []
 
     def _tok_shape(self) -> tuple:
         cb = self.cfg.n_codebooks
@@ -419,6 +461,7 @@ class ServeSession:
         if not self._slot_of and (self.queue):
             return self.admit_pending()
         wait0 = self.stats.transfer_wait_s
+        fetch0 = self.param_stats.unique_group_fetches
 
         tokens = np.zeros(self._tok_shape(), np.int32)
         pos = np.zeros((self.slots,), np.int32)
@@ -454,6 +497,9 @@ class ServeSession:
                 self._retire(req.rid)
         self.n_steps += 1
         self.step_waits.append(self.stats.transfer_wait_s - wait0)
+        self.param_step_fetches.append(
+            self.param_stats.unique_group_fetches - fetch0
+        )
         emitted.update(self.admit_pending())
         return emitted
 
@@ -475,6 +521,8 @@ class ServeSession:
             self._store.close()
         if self._param_store is not None:
             self._param_store.close()
+        if self.param_residency is not None:
+            self.param_residency.clear()  # release resident device copies
 
     def __enter__(self) -> "ServeSession":
         return self
@@ -666,6 +714,7 @@ def serve(
     device_budget_mb: Optional[float] = None,
     param_layers_per_group: Optional[int] = None,
     param_distance=AUTO,
+    param_cache_mb: Optional[float] = None,
 ):
     """Serve ``n_requests`` greedy-decode requests (default: one per batch
     slot) of ``prompt_len`` prompt tokens and ``gen`` generated tokens.
@@ -722,6 +771,7 @@ def serve(
         device_budget_mb=device_budget_mb,
         param_layers_per_group=param_layers_per_group,
         param_distance=param_distance,
+        param_cache_mb=param_cache_mb,
     ) as session:
         rids = [session.submit(prompts[i], gen) for i in range(n_requests)]
         if warmup:
@@ -756,6 +806,12 @@ def serve(
             "total_cache_bytes": session.pager.total_cache_bytes(),
             "param_stats": session.param_stats,
             "param_plan": session._wplan,
+            "param_step_fetches": list(session.param_step_fetches),
+            "param_residency": (
+                session.param_residency.counters()
+                if session.param_residency is not None
+                else None
+            ),
         }
         return res
 
@@ -786,6 +842,10 @@ def main() -> int:
     ap.add_argument("--device-budget-mb", type=float, default=None,
                     help="device budget shared by the KV hot window and the "
                     "streamed weight window")
+    ap.add_argument("--param-cache-mb", type=float, default=None,
+                    help="weight-residency cache capacity (default: the "
+                    "budget slack above the prefetch window; unbounded "
+                    "without a budget; 0 disables)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -808,6 +868,7 @@ def main() -> int:
         spill_dir=args.spill_dir,
         param_kind=args.param_kind,
         device_budget_mb=args.device_budget_mb,
+        param_cache_mb=args.param_cache_mb,
     )
     stats = res["stats"]
     print(
@@ -833,13 +894,23 @@ def main() -> int:
     if res.get("param_plan") is not None:
         ps = res["param_stats"]
         plan = res["param_plan"]
+        h2d = ps.per_tier()["h2d"]
         print(
             f"weights: {plan.n_groups} groups x {plan.layers_per_group} "
             f"layers, {ps.h2d_requests} H2D req "
-            f"({ps.per_tier()['h2d']['requests_per_device_group']:.2f}/"
-            f"(device,group)), peak streamed {ps.peak_inflight_bytes} B "
-            f"of {plan.total_param_bytes} B total params"
+            f"({h2d['requests_per_fetched_device_group']:.2f}/"
+            f"(device,group) fetched), peak streamed "
+            f"{ps.peak_inflight_bytes} B of {plan.total_param_bytes} B "
+            f"total params"
         )
+        if res.get("param_residency") is not None:
+            rc = res["param_residency"]
+            print(
+                f"weight residency: {rc['hits']} hits / {rc['misses']} "
+                f"misses, {rc['resident_bytes']} B resident "
+                f"(peak {rc['peak_resident_bytes']} B, "
+                f"{rc['evictions']} evictions)"
+            )
     return 0
 
 

@@ -177,6 +177,19 @@ def build_trainer(
             plan.peak_device_bytes(1) / 1e6,
             plan.max_distance_for_budget(),
         )
+        # weight-residency cache: the budget slack above the prefetch
+        # window keeps recently fetched groups device-resident, so the
+        # backward re-walk (and the next step's forward) hits instead of
+        # re-fetching — window + cache still never exceed the budget
+        from repro.core.residency import ResidencyCache
+
+        residency = ResidencyCache(plan.residency_capacity_bytes())
+        log.info(
+            "weight residency cache: %s capacity",
+            "unbounded"
+            if residency.capacity_bytes is None
+            else f"{residency.capacity_bytes / 1e6:.1f} MB",
+        )
         engine = TransferEngine(
             EngineConfig(
                 max_distance=plan.max_distance_for_budget(),
@@ -220,6 +233,7 @@ def build_trainer(
             # groups stage at the sharding plan's param specs under a mesh
             param_shardings=p_sh if mesh.devices.size > 1 else None,
             param_kind=param_kind,
+            residency=residency,
         )
 
         def init_state_ws():
@@ -238,6 +252,13 @@ def build_trainer(
             with mesh:
                 return streamed(state, batch)
 
+        def on_restart_ws(_n):
+            # restart restores an older checkpoint (or re-inits), so cached
+            # device copies no longer match the home — a failure *outside*
+            # the step (checkpoint commit, watchdog) skips the step's own
+            # failure clear, so the restart hook must drop them too
+            residency.clear()
+
         driver = TrainDriver(
             driver_cfg,
             wrapped_step_ws,
@@ -248,6 +269,7 @@ def build_trainer(
             stream_stats=param_stats,
             spill_store=param_store,
             run_meta=run_meta,
+            on_restart=on_restart_ws,
         )
         return driver
 

@@ -174,6 +174,14 @@ class TrainDriver:
                     s.writeback_drain_s,
                     s.distance_trace[-1] if s.distance_trace else None,
                 )
+                if s.cache_hits or s.cache_misses:
+                    log.info(
+                        "weight residency: %d unique group fetches, "
+                        "%d cache hits / %d misses",
+                        s.unique_group_fetches,
+                        s.cache_hits,
+                        s.cache_misses,
+                    )
                 if s.disk_requests:
                     log.info(
                         "disk tier: %d requests (%.2f/group), %.1f MB, "

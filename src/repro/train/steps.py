@@ -25,6 +25,7 @@ from repro.configs.base import ModelConfig
 from repro.core.engine import EngineConfig, TransferEngine
 from repro.core.hoststream import HostStreamExecutor, StreamStats
 from repro.core.refspec import PrefetchSpec
+from repro.core.residency import ResidencyCache
 from repro.core.weightstream import WeightStreamPlan
 from repro.models import transformer
 from repro.optim.adamw import (
@@ -472,6 +473,7 @@ def make_weight_streamed_train_step(
     spill_store=None,
     param_shardings: Optional[Pytree] = None,
     param_kind: str = "pinned_host",
+    residency: Optional[ResidencyCache] = None,
 ) -> Callable[[dict, Pytree], tuple[dict, dict]]:
     """``(state, batch) -> (state, metrics)`` with host/disk-homed weights.
 
@@ -509,6 +511,18 @@ def make_weight_streamed_train_step(
     ``stats`` accounts the parameter fetch passes (forward + backward) —
     its ``peak_inflight_bytes`` is what ``--device-budget-mb`` bounds;
     ``opt_stats`` accounts the optimizer phase separately.
+
+    ``residency`` is the weight-residency group cache (default: one sized
+    to the plan's budget slack — see
+    :meth:`WeightStreamPlan.residency_capacity_bytes`; inert at zero
+    slack).  Landed fetch groups stay device-resident up to its capacity,
+    the last K layer groups are PINNED across the forward→backward
+    turnaround so the reverse-order backward's first K groups are hits
+    instead of re-fetches, and the optimizer phase REFRESHES every cached
+    group in place with the post-update device values (the same bits its
+    D2H drain writes to the home) — a stale cached group after the
+    group-wise optimizer update would silently train on old weights, so a
+    step that fails mid-update clears the cache outright.
     """
     if param_kind == "disk_host" and spill_store is None:
         raise ValueError("param_kind='disk_host' requires a spill_store")
@@ -517,24 +531,66 @@ def make_weight_streamed_train_step(
     )
     mode = "on_demand" if prefetch.on_demand else "prefetch"
     pf = None if mode == "on_demand" else prefetch
+    if residency is None and param_kind != "device":
+        residency = ResidencyCache(plan.residency_capacity_bytes())
+    #: device-kind homes already pass through at zero requests — caching
+    #: them would only alias the home groups
+    cache = residency if param_kind != "device" else None
+    cache_reserved = (
+        cache.capacity_bytes or 0
+    ) if cache is not None and plan.device_budget_bytes is not None else 0
     own_engine = engine is None
     if engine is None:
         engine = TransferEngine(
-            EngineConfig(max_distance=plan.max_distance_for_budget())
+            EngineConfig(
+                max_distance=plan.max_distance_for_budget(
+                    cached_bytes=cache_reserved
+                )
+            )
         )
     elif (
         plan.device_budget_bytes is not None
-        and engine.config.max_distance > plan.max_distance_for_budget()
+        and engine.config.max_distance
+        > plan.max_distance_for_budget(cached_bytes=cache_reserved)
     ):
         raise ValueError(
             f"engine max_distance={engine.config.max_distance} exceeds the "
-            f"device budget's window cap {plan.max_distance_for_budget()}; "
+            f"device budget's window cap "
+            f"{plan.max_distance_for_budget(cached_bytes=cache_reserved)} "
+            "(prefetch window + residency cache share the budget); "
             "configure the engine from the plan"
         )
     stats = stats if stats is not None else StreamStats()
     opt_stats = opt_stats if opt_stats is not None else StreamStats()
     nlg = len(plan.layer_groups)
     f32 = jnp.float32
+
+    #: the forward→backward turnaround pin set: backward consumes groups in
+    #: reverse fetch order, so the LAST groups forward fetched are the FIRST
+    #: backward wants — pin as many of them as the cache can hold so they
+    #: cannot be evicted between the passes (the double-fetch this PR kills)
+    pin_keys: frozenset = frozenset()
+    if cache is not None:
+        picked: list = []
+        total = 0
+        for g in [plan.groups[i] for i in range(nlg, 0, -1)] + [plan.groups[0]]:
+            nb = plan.group_bytes(g, fetch=False)
+            if cache.capacity_bytes is not None and total + nb > cache.capacity_bytes:
+                break
+            picked.append(g.key)
+            total += nb
+        pin_keys = frozenset(picked)
+
+    def _store(g, fetched, *, pinned: bool = False) -> None:
+        """Retain a landed fetch group in the residency cache (home part
+        only — the tied head's borrowed embed leaf stays with group 0)."""
+        if cache is not None:
+            cache.put(
+                g.key,
+                plan.cache_home_tree(g, fetched),
+                plan.group_bytes(g, fetch=False),
+                pinned=pinned,
+            )
 
     # -- jitted stage programs (identical for every param kind) -------------
     @jax.jit
@@ -605,6 +661,7 @@ def make_weight_streamed_train_step(
     box: dict = {}
 
     def apply_f(i, carry, group):
+        _store(plan.groups[i], group, pinned=plan.groups[i].key in pin_keys)
         if i == 0:
             box["x"], box["angles"] = embed_fwd(group, box["batch"])
             box["aux"] = jnp.zeros((), f32)
@@ -624,6 +681,7 @@ def make_weight_streamed_train_step(
         return loss
 
     def apply_b(i, carry, group):
+        _store(plan.groups[nlg - i] if i < nlg else plan.groups[0], group)
         if i < nlg:
             x_in = box["acts"][nlg - 1 - i]  # reverse fetch order
             dp, dx, sq = group_bwd(group, x_in, box["angles"], box["ct"])
@@ -636,6 +694,18 @@ def make_weight_streamed_train_step(
 
     def apply_o(i, carry, group):
         new_p, new_s = opt_group(box["glob"], group["g"], group["s"])
+        if cache is not None:
+            # writeback invalidation, done as an update-in-place: the
+            # optimizer just made every cached copy of this group stale,
+            # and ``new_p`` here is the exact device value whose D2H drain
+            # becomes the new home bytes — refreshing with it keeps the
+            # cache bitwise-identical to a re-fetch of the new home
+            g = o_order[i]
+            cache.refresh(
+                g.key,
+                plan.cache_home_tree(g, new_p),
+                plan.group_bytes(g, fetch=False),
+            )
         return carry, {"p": new_p, "s": new_s}
 
     ex_f = HostStreamExecutor(apply_f, indexed=True, engine=engine)
@@ -684,20 +754,36 @@ def make_weight_streamed_train_step(
             return jax.device_put(p_new, sh), jax.device_put(s_new, opt_sh)
         return p_new, s_new  # pinned_host: the drained numpy IS the home
 
-    def step_fn(state, batch):
+    def _step_body(state, batch):
         home, opt = state["params"], state["opt"]
         box.clear()
         box["batch"] = batch
 
-        # phase F: forward fetch order [embed, L0..Ln, head]
-        fwd_groups = plan.fetch_groups_forward(home)
+        # phase F: forward fetch order [embed, L0..Ln, head].  With a cache
+        # the fetch sequence is thunks resolved at submit time, so each
+        # submit sees the residency state the moment the transfer would go
+        # out (e.g. the embed group landed two submits ago → the tied head's
+        # table leaf is borrowed instead of re-read over the link).
+        if cache is not None:
+            fwd_groups = plan.fetch_thunks_forward(home, cache)
+        else:
+            fwd_groups = plan.fetch_groups_forward(home)
         ex_f.run(
             jnp.zeros(()), fwd_groups, mode=mode, prefetch=pf, stats=stats,
             group_shardings=sh_fwd,
         )
 
-        # phase B: reverse fetch order [Ln..L0, embed]; grads drain D2H
-        bwd_groups = [fwd_groups[i] for i in range(nlg, 0, -1)] + [fwd_groups[0]]
+        # phase B: reverse fetch order [Ln..L0, embed]; grads drain D2H.
+        # The pinned turnaround set makes the first fetches here cache hits.
+        if cache is not None:
+            bwd_groups = [
+                (lambda g=g: plan.fetch_group(home, g, cache))
+                for g in (
+                    [plan.groups[i] for i in range(nlg, 0, -1)] + [plan.groups[0]]
+                )
+            ]
+        else:
+            bwd_groups = [fwd_groups[i] for i in range(nlg, 0, -1)] + [fwd_groups[0]]
         _, grad_outs = ex_b.run(
             box["ct"], bwd_groups, mode=mode, prefetch=pf, stats=stats,
             group_shardings=sh_bwd,
@@ -741,16 +827,33 @@ def make_weight_streamed_train_step(
         box.clear()
         return new_state, metrics
 
+    def step_fn(state, batch):
+        if cache is None:
+            return _step_body(state, batch)
+        try:
+            return _step_body(state, batch)
+        except BaseException:
+            # a step that died mid-optimizer leaves some cached groups
+            # refreshed and some stale — indistinguishable from outside, so
+            # the only safe cache is an empty one
+            cache.clear()
+            raise
+        finally:
+            cache.unpin_all()
+
     def close():
         for ex in (ex_f, ex_b, ex_o):
             ex.close()
         if own_engine:
             engine.close()
+        if cache is not None:
+            cache.clear()  # release the resident device copies
 
     step_fn.close = close  # type: ignore[attr-defined]
     step_fn.param_stats = stats  # type: ignore[attr-defined]
     step_fn.opt_stats = opt_stats  # type: ignore[attr-defined]
     step_fn.engine = engine  # type: ignore[attr-defined]
+    step_fn.residency = cache  # type: ignore[attr-defined]
     return step_fn
 
 
@@ -766,10 +869,16 @@ def make_weight_streamed_prefill_step(
     prefetch: Optional[PrefetchSpec] = None,
     stats: Optional[StreamStats] = None,
     param_shardings: Optional[Pytree] = None,
+    residency: Optional[ResidencyCache] = None,
 ) -> Callable[[dict, Pytree], tuple[jax.Array, Pytree]]:
     """``(home, batch) -> (last-token logits, caches)`` with the params
     streamed group-wise; each layer group fills its stacked cache slice and
-    the full cache is concatenated once at the end."""
+    the full cache is concatenated once at the end.
+
+    ``residency`` keeps landed groups device-resident across calls: serve
+    params are immutable, so there is no invalidation — a resident group
+    passes through the engine at zero requests on every later prefill or
+    decode step until the LRU evicts it."""
     prefetch = prefetch or PrefetchSpec(
         buffer_size=plan.n_groups + 2, distance="auto"
     )
@@ -801,6 +910,12 @@ def make_weight_streamed_prefill_step(
     box: dict = {}
 
     def apply(i, carry, group):
+        if residency is not None:
+            g = plan.groups[i]
+            residency.put(
+                g.key, plan.cache_home_tree(g, group),
+                plan.group_bytes(g, fetch=False),
+            )
         if i == 0:
             box["x"], box["angles"] = embed_fwd(group, box["batch"])
             box["slices"] = []
@@ -818,8 +933,13 @@ def make_weight_streamed_prefill_step(
     def prefill(home, batch):
         box.clear()
         box["batch"] = batch
+        groups = (
+            plan.fetch_thunks_forward(home, residency)
+            if residency is not None
+            else plan.fetch_groups_forward(home)
+        )
         ex.run(
-            jnp.zeros(()), plan.fetch_groups_forward(home), mode=mode,
+            jnp.zeros(()), groups, mode=mode,
             prefetch=pf, stats=stats, group_shardings=sh_fwd,
         )
         logits, caches = box["logits"], concat0(tuple(box["slices"]))
@@ -827,6 +947,7 @@ def make_weight_streamed_prefill_step(
         return logits, caches
 
     prefill.close = ex.close  # type: ignore[attr-defined]
+    prefill.residency = residency  # type: ignore[attr-defined]
     return prefill
 
 
@@ -841,6 +962,7 @@ def make_weight_streamed_decode_step(
     stats: Optional[StreamStats] = None,
     param_shardings: Optional[Pytree] = None,
     paged: bool = True,
+    residency: Optional[ResidencyCache] = None,
 ) -> Callable[..., tuple[jax.Array, Pytree]]:
     """Streamed-params decode step.
 
@@ -894,6 +1016,12 @@ def make_weight_streamed_decode_step(
     box: dict = {}
 
     def apply(i, carry, group):
+        if residency is not None:
+            g = plan.groups[i]
+            residency.put(
+                g.key, plan.cache_home_tree(g, group),
+                plan.group_bytes(g, fetch=False),
+            )
         if i == 0:
             box["x"], box["angles"] = embed_dec(group, box["batch"], box["pos"])
             box["new_slices"] = []
@@ -915,8 +1043,13 @@ def make_weight_streamed_decode_step(
         box["batch"] = batch
         box["pos"] = pos
         box["slices"] = split(caches)
+        groups = (
+            plan.fetch_thunks_forward(home, residency)
+            if residency is not None
+            else plan.fetch_groups_forward(home)
+        )
         ex.run(
-            jnp.zeros(()), plan.fetch_groups_forward(home), mode=mode,
+            jnp.zeros(()), groups, mode=mode,
             prefetch=pf, stats=stats, group_shardings=sh_fwd,
         )
         logits, new_caches = box["logits"], concat0(tuple(box["new_slices"]))
@@ -932,8 +1065,10 @@ def make_weight_streamed_decode_step(
 
         paged_decode.close = ex.close  # type: ignore[attr-defined]
         paged_decode.dense = decode  # type: ignore[attr-defined]
+        paged_decode.residency = residency  # type: ignore[attr-defined]
         return paged_decode
     decode.close = ex.close  # type: ignore[attr-defined]
+    decode.residency = residency  # type: ignore[attr-defined]
     return decode
 
 

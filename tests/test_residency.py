@@ -1,0 +1,403 @@
+"""Weight-residency group cache tests (ISSUE 7 tentpole).
+
+Pins the residency contract at unit and integration level:
+  * ResidencyCache policy: LRU eviction order, pin protection, oversize
+    refusal (cache unchanged), refresh-in-place, zero-capacity inertness,
+    clear-on-failure semantics,
+  * cached streamed train bitwise-equal to the UNCACHED streamed run (and
+    hence to the device run) for every kind x distance 0/1/auto,
+  * zero-slack budgets degenerate to the plain streaming schedule (every
+    consumed group is a unique fetch — the pre-cache traffic, exactly),
+  * writeback invalidation: after the group-wise optimizer update the
+    cached device copies equal the re-homed bytes (no stale weights),
+  * serve steady state: with cache slack a session stops re-fetching the
+    model every decode step; the budget validation rejects hot window +
+    cache over budget with an actionable message,
+  * tied-head embed dedupe: a resident embed group lends its table leaf
+    to the head fetch instead of re-reading it over the link.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.refspec import PrefetchSpec
+from repro.core.residency import ResidencyCache
+from repro.core.weightstream import WeightStreamPlan
+from repro.data.synthetic import SyntheticConfig, synthetic_batch
+from repro.optim.adamw import AdamWConfig
+from repro.train import steps as st
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(get_smoke_config("smollm-360m"), n_layers=4)
+
+
+@pytest.fixture(scope="module")
+def plan(cfg):
+    return WeightStreamPlan(cfg, st.abstract_params(cfg), layers_per_group=2)
+
+
+@pytest.fixture(scope="module")
+def opt_cfg():
+    return AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=32)
+
+
+def _batch(cfg, step=0):
+    return synthetic_batch(cfg, SyntheticConfig(cfg.vocab_size, 16, 2, seed=0), step)
+
+
+def _t(n):
+    """An n-byte uint8 tree."""
+    return {"w": np.zeros(n, np.uint8)}
+
+
+# ---------------------------------------------------------------------------
+# cache policy units
+# ---------------------------------------------------------------------------
+
+
+def test_lru_evicts_least_recently_used_first():
+    c = ResidencyCache(30)
+    assert c.put("a", _t(10)) and c.put("b", _t(10)) and c.put("c", _t(10))
+    c.lookup("a")  # a is now MRU; b is LRU
+    assert c.put("d", _t(10))
+    assert "b" not in c and set(c.keys()) == {"a", "c", "d"}
+    assert c.evictions == 1
+    assert c.resident_bytes == 30
+
+
+def test_pinned_entries_survive_eviction_pressure():
+    c = ResidencyCache(30)
+    c.put("a", _t(10), pinned=True)
+    c.put("b", _t(10))
+    c.put("c", _t(10))
+    assert c.put("d", _t(10))  # must evict b (LRU unpinned), never a
+    assert "a" in c and "b" not in c
+
+
+def test_oversize_put_refused_cache_unchanged():
+    c = ResidencyCache(25)
+    c.put("a", _t(10), pinned=True)
+    c.put("b", _t(10))
+    before = (set(c.keys()), c.resident_bytes)
+    # 20 bytes cannot fit: only b (10) is evictable above the pin
+    assert not c.put("big", _t(20))
+    assert (set(c.keys()), c.resident_bytes) == before
+    assert c.refusals == 1
+
+
+def test_refresh_replaces_stale_value_and_keeps_pin():
+    c = ResidencyCache(None)
+    old = _t(8)
+    new = {"w": np.ones(8, np.uint8)}
+    c.put("a", old, pinned=True)
+    assert c.refresh("a", new)
+    got = c.lookup("a")
+    np.testing.assert_array_equal(got["w"], new["w"])
+    assert c.invalidations == 1
+    # the pin survived the in-place refresh
+    c.put("b", _t(4))
+    assert c._entries["a"].pinned
+
+
+def test_zero_capacity_cache_is_inert():
+    c = ResidencyCache(0)
+    assert not c.put("a", _t(1))
+    assert c.lookup("a") is None
+    assert len(c) == 0 and c.resident_bytes == 0
+    assert c.hits == 0 and c.misses == 1
+
+
+def test_clear_drops_everything_including_pins():
+    c = ResidencyCache(None)
+    c.put("a", _t(4), pinned=True)
+    c.put("b", _t(4))
+    c.clear()
+    assert len(c) == 0 and c.resident_bytes == 0
+    assert c.lookup("a") is None and c.lookup("b") is None
+
+
+def test_unbounded_capacity_never_evicts():
+    c = ResidencyCache(None)
+    for i in range(64):
+        assert c.put(f"k{i}", _t(1000))
+    assert c.evictions == 0 and c.resident_bytes == 64_000
+    assert c.peak_resident_bytes == 64_000
+
+
+# ---------------------------------------------------------------------------
+# cached vs uncached streamed train: bitwise across kind x distance
+# ---------------------------------------------------------------------------
+
+
+def _train(cfg, opt_cfg, plan, kind, residency, n=2, distance="auto", store=None):
+    step = st.make_weight_streamed_train_step(
+        cfg, opt_cfg, plan=plan, param_kind=kind, spill_store=store,
+        prefetch=PrefetchSpec(buffer_size=plan.n_groups + 2, distance=distance),
+        residency=residency,
+    )
+    state = st.init_weight_streamed_state(jax.random.PRNGKey(0), cfg, plan)
+    if kind == "disk_host":
+        state = st.spill_weight_streamed_state(plan, state, store)
+    losses = []
+    try:
+        for k in range(n):
+            state, m = step(state, _batch(cfg, k))
+            losses.append(float(m["loss"]))
+    finally:
+        stats = step.param_stats
+        cache = step.residency
+        step.close()
+    return losses, state, stats, cache
+
+
+def _assert_same_params(a_state, b_state):
+    for key in a_state["params"]["groups"]:
+        for a, b in zip(
+            jax.tree.leaves(a_state["params"]["groups"][key]),
+            jax.tree.leaves(b_state["params"]["groups"][key]),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("distance", [0, 1, "auto"])
+@pytest.mark.parametrize("kind", ["pinned_host", "disk_host"])
+def test_cached_train_bitwise_equals_uncached(cfg, opt_cfg, plan, kind, distance):
+    """The cache must change traffic, never values: a run with an unbounded
+    cache is bitwise-identical to the same run with a disabled cache."""
+    import tempfile
+
+    from repro.core.spillstore import SpillStore
+
+    def run(cap):
+        if kind == "disk_host":
+            with tempfile.TemporaryDirectory() as d:
+                store = SpillStore(d, ephemeral=True)
+                out = _train(
+                    cfg, opt_cfg, plan, kind, ResidencyCache(cap),
+                    distance=distance, store=store,
+                )
+                # drain disk leaves to numpy before the store closes
+                state = out[1]
+                state["params"]["groups"] = {
+                    k: jax.tree.map(np.array, v)
+                    for k, v in state["params"]["groups"].items()
+                }
+                store.close()
+                return out
+        return _train(
+            cfg, opt_cfg, plan, kind, ResidencyCache(cap), distance=distance
+        )
+
+    u_losses, u_state, u_stats, _ = run(0)  # disabled cache = PR 5 schedule
+    c_losses, c_state, c_stats, _ = run(None)  # unbounded cache
+    assert c_losses == u_losses
+    _assert_same_params(c_state, u_state)
+    # the uncached run fetched every consumed group; the cached one did not
+    assert u_stats.unique_group_fetches == u_stats.n_groups
+    assert u_stats.cache_hits == 0
+    assert c_stats.unique_group_fetches < c_stats.n_groups
+    assert c_stats.cache_hits > 0
+
+
+def test_zero_slack_budget_degenerates_to_plain_streaming(cfg, opt_cfg):
+    """budget == the window peak -> residency_capacity_bytes() == 0 -> the
+    default cache is inert and the schedule (and its traffic) is exactly
+    the pre-cache one, still bitwise-correct."""
+    abs_p = st.abstract_params(cfg)
+    probe = WeightStreamPlan(cfg, abs_p, layers_per_group=2)
+    tight = WeightStreamPlan(
+        cfg, abs_p, layers_per_group=2,
+        device_budget_mb=probe.peak_device_bytes(1) / 1e6,
+    )
+    assert tight.residency_capacity_bytes() == 0
+    losses, state, stats, cache = _train(
+        cfg, opt_cfg, tight, "pinned_host", None, distance=1
+    )
+    assert cache is not None and cache.capacity_bytes == 0
+    assert stats.cache_hits == 0
+    assert stats.unique_group_fetches == stats.n_groups > 0
+    # and the degenerate run still trains identically to an uncached run
+    slack = WeightStreamPlan(cfg, abs_p, layers_per_group=2)
+    ref_losses, ref_state, _, _ = _train(
+        cfg, opt_cfg, slack, "pinned_host", ResidencyCache(0), distance=1
+    )
+    assert losses == ref_losses
+    _assert_same_params(state, ref_state)
+
+
+def test_cached_groups_fresh_after_optimizer_update(cfg, opt_cfg, plan):
+    """Writeback invalidation: after a step, every cached group equals its
+    re-homed (post-update) bytes — training from the cache next step uses
+    the NEW weights (the regression this PR's invalidation prevents)."""
+    step = st.make_weight_streamed_train_step(
+        cfg, opt_cfg, plan=plan, param_kind="pinned_host",
+        prefetch=PrefetchSpec(buffer_size=plan.n_groups + 2, distance="auto"),
+    )
+    state = st.init_weight_streamed_state(jax.random.PRNGKey(0), cfg, plan)
+    try:
+        state, _ = step(state, _batch(cfg, 0))
+        cache = step.residency
+        assert cache is not None and len(cache) > 0
+        for key in cache.keys():
+            cached = cache.peek(key)
+            home = state["params"]["groups"][key]
+            for a, b in zip(jax.tree.leaves(cached), jax.tree.leaves(home)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # nothing is pinned between steps (pins cover one turnaround only)
+        assert cache.pinned_bytes == 0
+        # and a second step from the (fresh) cache stays bitwise-correct
+        state, m1 = step(state, _batch(cfg, 1))
+    finally:
+        step.close()
+    ref_losses, ref_state, _, _ = _train(
+        cfg, opt_cfg, plan, "pinned_host", ResidencyCache(0)
+    )
+    assert float(m1["loss"]) == ref_losses[1]
+    _assert_same_params(state, ref_state)
+
+
+def test_failed_step_clears_cache(cfg, opt_cfg, plan):
+    """A step that dies mid-stream may leave refreshed-but-uncommitted
+    groups — the cache must come back empty, not half-updated."""
+    step = st.make_weight_streamed_train_step(
+        cfg, opt_cfg, plan=plan, param_kind="pinned_host",
+        prefetch=PrefetchSpec(buffer_size=plan.n_groups + 2, distance="auto"),
+    )
+    state = st.init_weight_streamed_state(jax.random.PRNGKey(0), cfg, plan)
+    try:
+        state, _ = step(state, _batch(cfg, 0))
+        assert len(step.residency) > 0
+        bad = {"tokens": np.zeros((2, 16), np.int32), "boom": object()}
+        with pytest.raises(Exception):
+            step(state, bad)
+        assert len(step.residency) == 0  # poisoned cache dropped outright
+        # the next good step repopulates and still runs
+        state, m = step(state, _batch(cfg, 1))
+        assert np.isfinite(float(m["loss"]))
+    finally:
+        step.close()
+
+
+def test_driver_restart_clears_stale_cache(cfg, opt_cfg, tmp_path):
+    """A failure OUTSIDE the step (checkpoint commit, watchdog, injected
+    pre-step fault) restores older state without tripping the step's own
+    failure clear — the driver's restart hook must drop the cache or the
+    replay streams post-failure device copies against pre-failure homes."""
+    from repro.launch.train import build_trainer
+    from repro.runtime.driver import DriverConfig
+    from repro.runtime.elastic import elastic_local_mesh
+
+    def losses(root, fail_at):
+        d = build_trainer(
+            cfg,
+            elastic_local_mesh(model=1),
+            global_batch=2,
+            seq_len=16,
+            opt_cfg=opt_cfg,
+            driver_cfg=DriverConfig(
+                total_steps=4, checkpoint_every=4,
+                checkpoint_dir=str(root), log_every=0, max_restarts=1,
+            ),
+            fail_at=fail_at,
+            param_kind="pinned_host",
+            param_layers_per_group=2,
+        )
+        d.run()
+        out = {}
+        for h in d.history:  # later entries overwrite replayed steps
+            out[h["step"]] = h["loss"]
+        return out, d.restarts
+
+    ref, _ = losses(tmp_path / "ref", None)
+    # no checkpoint exists yet at step 2, so the restart re-inits from
+    # scratch and replays 0..3 — stale cached groups would poison step 0
+    got, restarts = losses(tmp_path / "chaos", {2})
+    assert restarts == 1
+    assert ref == got
+
+
+# ---------------------------------------------------------------------------
+# tied-head embed-table dedupe
+# ---------------------------------------------------------------------------
+
+
+def test_head_borrows_resident_embed_table(cfg, plan):
+    params, _ = st.init_train_state(jax.random.PRNGKey(0), cfg)
+    home = plan.init_home(params)
+    assert plan.head_reads_embed
+    cache = ResidencyCache(None)
+    head = plan.groups[-1]
+
+    # embed not resident: the head fetch reads the host table leaf
+    fetch = plan.fetch_group(home, head, cache)
+    assert isinstance(fetch["embed"]["tok"], np.ndarray)
+
+    # embed resident: the head fetch borrows the DEVICE table (zero link
+    # bytes for the table even though the head itself is a miss)
+    embed_dev = jax.device_put(home["groups"][plan.groups[0].key])
+    cache.put(plan.groups[0].key, embed_dev)
+    fetch = plan.fetch_group(home, head, cache)
+    assert fetch["embed"]["tok"] is embed_dev["embed"]["tok"]
+    # the cached head entry never retains the borrowed table
+    stored = plan.cache_home_tree(head, fetch)
+    assert "embed" not in stored and set(stored) == set(plan.head_home_keys)
+
+
+# ---------------------------------------------------------------------------
+# serve: steady-state residency + budget validation
+# ---------------------------------------------------------------------------
+
+
+def test_serve_steady_state_stops_refetching(cfg):
+    from repro.launch import serve as sv
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    ref = sv.serve(
+        cfg, mesh, batch=2, prompt_len=12, gen=6, kv_kind="pinned_host",
+        kv_page_len=4, seed=3, param_kind="device",
+    )
+    res = sv.serve(
+        cfg, mesh, batch=2, prompt_len=12, gen=6, kv_kind="pinned_host",
+        kv_page_len=4, seed=3, param_kind="pinned_host",
+    )
+    assert np.array_equal(res["generated"], ref["generated"])
+    rc = res["param_residency"]
+    assert rc is not None and rc["hits"] > 0
+    # no budget -> unbounded cache -> after the first pass the model is
+    # resident and decode steps issue ZERO weight fetches
+    fetches = res["param_step_fetches"]
+    assert fetches and all(f == 0 for f in fetches)
+    # disabling the cache restores the per-step full re-fetch (the bug)
+    res0 = sv.serve(
+        cfg, mesh, batch=2, prompt_len=12, gen=6, kv_kind="pinned_host",
+        kv_page_len=4, seed=3, param_kind="pinned_host", param_cache_mb=0.0,
+    )
+    assert np.array_equal(res0["generated"], ref["generated"])
+    n_groups = res0["param_plan"].n_groups
+    assert all(f == n_groups for f in res0["param_step_fetches"])
+
+
+def test_serve_validates_hot_window_plus_cache_budget(cfg):
+    from repro.launch import serve as sv
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    with pytest.raises(ValueError, match="param_cache_mb"):
+        sv.ServeSession(
+            cfg, mesh, slots=2, max_len=32, kv_kind="pinned_host",
+            page_len=4, param_kind="pinned_host", device_budget_mb=0.3,
+            param_cache_mb=100.0,
+        )
+    # a cache that fits is accepted and capped at the requested bytes
+    with sv.ServeSession(
+        cfg, mesh, slots=2, max_len=32, kv_kind="pinned_host",
+        page_len=4, param_kind="pinned_host", device_budget_mb=5.0,
+        param_cache_mb=0.5,
+    ) as s:
+        assert s.param_residency.capacity_bytes == int(0.5e6)

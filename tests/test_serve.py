@@ -505,7 +505,10 @@ def test_streamed_params_serve_matches_device_run(cfg, mesh, reference, param_ki
     assert np.array_equal(res["generated"], reference["generated"])
     ps = res["param_stats"]
     assert ps.n_groups > 0
-    assert ps.per_tier()["h2d"]["requests_per_device_group"] == 1.0
+    # groups that did cross the link cost ONE coalesced request each; the
+    # residency cache turns repeat visits into zero-request pass-throughs
+    assert ps.per_tier()["h2d"]["requests_per_fetched_device_group"] == 1.0
+    assert ps.unique_group_fetches > 0
     assert ps.peak_inflight_bytes > 0
     if param_kind == "disk_host":
         assert ps.disk_requests > 0

@@ -150,9 +150,15 @@ def test_streamed_train_bitwise_vs_device(cfg, opt_cfg, plan):
             jax.tree.leaves(ref_state["params"]["groups"][key]),
         ):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # exactly one coalesced H2D request per fetched (device, group)
-    assert stats.per_tier()["h2d"]["requests_per_device_group"] == 1.0
-    assert stats.h2d_requests == stats.n_groups > 0
+    # exactly one coalesced H2D request per FETCHED (device, group); the
+    # residency cache (unbounded here — no budget) makes every non-first
+    # visit a resident pass-through, so total link traffic is well below
+    # one request per consumed group
+    h2d = stats.per_tier()["h2d"]
+    assert h2d["requests_per_fetched_device_group"] == 1.0
+    assert stats.h2d_requests == stats.unique_group_fetches > 0
+    assert stats.cache_hits > 0
+    assert stats.h2d_requests < stats.n_groups
 
 
 def test_streamed_train_disk_home_bitwise_and_writes_back(cfg, opt_cfg, plan):
