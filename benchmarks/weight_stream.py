@@ -35,6 +35,17 @@ Residency gates (the ISSUE 7 acceptance):
     the model each decode step (per-step unique fetches -> 0), while
     ``param_cache_mb=0`` pays the full ``n_groups`` every step.
 
+Expert gates (the ISSUE 8 acceptance):
+
+  * **routed traffic**: router-first decode on a top-2-of-8 MoE fetches
+    >= 2x fewer expert weight bytes per step than the all-expert
+    baseline, with identical routed traffic for every home kind ×
+    distance;
+  * **routed bitwise**: routed and all-expert streamed decode tokens
+    equal the device-resident run;
+  * **expert requests**: exactly 1 H2D request per FETCHED
+    (device, expert group).
+
 Emits ``results/bench/BENCH_weights.json``.  ``REPRO_BENCH_SMOKE=1``
 (set by ``benchmarks/run.py --smoke``) shrinks the workload for CI.
 """
@@ -233,6 +244,45 @@ def _decode_run(cfg, kind, distance, budget_mb, param_cache_mb=None):
     return res["generated"], row
 
 
+def _expert_decode_run(cfg, kind, distance, route=True):
+    """One unpaged streamed-serve run with expert-split groups; returns
+    (tokens, row) with the expert-group decode-loop traffic."""
+    from repro.launch import serve as sv
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    res = sv.serve(
+        cfg,
+        mesh,
+        batch=2,
+        prompt_len=8,
+        gen=6,
+        kv_page_len=0,
+        seed=7,
+        warmup=False,
+        param_kind=kind,
+        param_distance=distance,
+        param_cache_mb=0.0,
+        expert_stream=True,
+        route_experts=route,
+    )
+    es = res["expert_stats"]
+    row = {
+        "phase": "decode_experts",
+        "param_kind": kind,
+        "distance": str(distance),
+        "route_experts": route,
+        "generated": res["generated"].tolist(),
+        "expert_decode_bytes": res["expert_decode_bytes"],
+        "expert_decode_fetches": res["expert_decode_fetches"],
+        "expert_bytes_per_step": res["expert_decode_bytes"] / max(res["n_steps"], 1),
+        "requests_per_fetched_device_group": (
+            es.per_tier()["h2d"]["requests_per_fetched_device_group"]
+        ),
+    }
+    return res["generated"], row
+
+
 def main() -> int:
     from repro.configs import get_smoke_config
 
@@ -362,6 +412,43 @@ def main() -> int:
         )
         rows.append(row)
 
+    # ---- expert streaming: routed decode fetches only the top-k experts ----
+    # top-2-of-8 MoE: the router-first schedule fetches the union of routed
+    # experts per (layer, step) instead of all 8 — gate >= 2x fewer expert
+    # weight bytes per decode step than the all-expert baseline, bitwise
+    # tokens for every kind x distance, 1 request per fetched expert group.
+    from repro.launch import serve as sv
+    from repro.launch.mesh import make_local_mesh
+
+    ecfg = dataclasses.replace(get_smoke_config("mixtral-8x7b"), n_experts=8)
+    e_mesh = make_local_mesh()
+    e_ref = sv.serve(
+        ecfg, e_mesh, batch=2, prompt_len=8, gen=6, kv_page_len=0, seed=7,
+        warmup=False,
+    )["generated"]
+    expert_bitwise_ok = True
+    expert_requests_ok = True
+    routed_bytes = {}
+    for kind in KINDS:
+        for dist in DISTANCES:
+            toks, row = _expert_decode_run(ecfg, kind, dist, route=True)
+            row["bitwise_equal_to_device"] = bool(np.array_equal(toks, e_ref))
+            expert_bitwise_ok &= row["bitwise_equal_to_device"]
+            expert_requests_ok &= (
+                row["requests_per_fetched_device_group"] == 1.0
+            )
+            routed_bytes[(kind, str(dist))] = row["expert_decode_bytes"]
+            rows.append(row)
+    a_toks, a_row = _expert_decode_run(ecfg, "pinned_host", "auto", route=False)
+    a_row["bitwise_equal_to_device"] = bool(np.array_equal(a_toks, e_ref))
+    expert_bitwise_ok &= a_row["bitwise_equal_to_device"]
+    rows.append(a_row)
+    routed = routed_bytes[("pinned_host", "auto")]
+    expert_traffic_ok = 2 * routed <= a_row["expert_decode_bytes"] and all(
+        b == routed for b in routed_bytes.values()
+    )
+    expert_ratio = a_row["expert_decode_bytes"] / max(routed, 1)
+
     C.print_table(
         "streamed weights (modeled link): train + paged decode",
         [r for r in rows if r["phase"] in ("train", "train_slack")],
@@ -385,10 +472,18 @@ def main() -> int:
         f"decode steady-state fetches (slack -> 0, no cache -> "
         f"{n_groups}/step): {decode_residency_ok}"
     )
+    print(
+        f"experts (top-2-of-{ecfg.n_experts}): routed decode "
+        f"{routed} B vs all-expert {a_row['expert_decode_bytes']} B = "
+        f"{expert_ratio:.2f}x reduction (gate >= 2x): {expert_traffic_ok}; "
+        f"tokens bitwise every kind x distance: {expert_bitwise_ok}; "
+        f"1 req/fetched expert group: {expert_requests_ok}"
+    )
     return 0 if (
         bitwise_ok and budget_ok and requests_ok and overlap_ok
         and zero_slack_ok and residency_ok and cached_budget_ok
-        and decode_residency_ok
+        and decode_residency_ok and expert_traffic_ok
+        and expert_bitwise_ok and expert_requests_ok
     ) else 1
 
 

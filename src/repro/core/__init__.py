@@ -40,8 +40,12 @@ from repro.core.kvpager import (
 )
 from repro.core.offload import offload
 from repro.core.weightstream import (
+    StreamUnit,
     WeightGroup,
     WeightStreamPlan,
+    WeightStreamSupport,
+    merge_expert_slice,
+    weight_stream_support,
     weight_stream_supported,
 )
 from repro.core.prefetch import eager_transfer, fetch_chunk, stream_blocks, streamed_scan
@@ -92,7 +96,11 @@ __all__ = [
     "PageStream",
     "assemble_view",
     "paged_cache_supported",
+    "StreamUnit",
     "WeightGroup",
     "WeightStreamPlan",
+    "WeightStreamSupport",
+    "merge_expert_slice",
+    "weight_stream_support",
     "weight_stream_supported",
 ]

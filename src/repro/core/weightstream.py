@@ -2,16 +2,29 @@
 
 The paper's flagship claim ("compute with data sets of arbitrarily large
 size", §3.1) applied to the largest pytree in the system — the model
-weights.  A :class:`WeightStreamPlan` partitions a uniform-scan model's
-parameter tree into **transfer groups**:
+weights.  A :class:`WeightStreamPlan` partitions a model's parameter tree
+into an ordered **group program** of typed fetch groups:
 
-  group 0         the *embed* group (token/audio embedding + vision merger)
-  groups 1..G     *layer groups*: contiguous slices ``[lo:hi)`` of the
-                  stacked ``blocks`` leaves (``layers_per_group`` layers,
-                  all leaves of those layers = ONE coalesced H2D request)
-  group G+1       the *head* group (final norm + LM head; tied/codebook
-                  heads re-read the embedding table, so their *fetch*
-                  group also references the embed home leaves)
+  kind        home slice
+  ----------  -----------------------------------------------------------
+  ``embed``   token/audio embedding + vision merger (always group 0)
+  ``layers``  contiguous ``[lo:hi)`` slice of uniform stacked ``blocks``
+              leaves; under ``expert_stream`` the slice excludes the
+              routed-expert tensors (router + attention + norms only)
+  ``expert``  ONE routed expert of ONE MoE layer: the ``(1, d, f)`` rows
+              ``blocks.moe.{wi,wo,wg}[l, e]`` as their own fetch group
+  ``period``  a slice of stacked period-units of a period-scanned hetero
+              stack (``blocks["periods"]``, hybrid/ssm archs)
+  ``block``   named unrolled blocks (``layer_###`` / period-scan tails) —
+              heterogeneous per-layer structures
+  ``head``    final norm + LM head (always the last group; tied/codebook
+              heads re-read the embedding table, so their *fetch* group
+              also references the embed home leaves)
+
+The middle of the program is summarized by :attr:`units` — the compute
+**stream units** the step builders walk (one unit = the groups consumed by
+one jitted stage call): a ``moe`` unit spans a layer's non-expert group
+plus its E expert groups; every other kind is one group per unit.
 
 Between steps the weights live at their **home kind** — host numpy
 (``pinned_host``) or :class:`~repro.core.spillstore.SpillStore` memmap
@@ -19,28 +32,31 @@ chunks (``disk_host``, one chunk per group = one disk request) — and
 stream group-wise through the :class:`~repro.core.engine.TransferEngine`
 while the previous group's compute runs:
 
-  forward    fetch order ``embed, L0, .., Ln, head``; the head stage also
+  forward    fetch order ``embed, U0, .., Un, head``; the head stage also
              computes the head/loss gradients (its params are in hand).
-  backward   **reverse** fetch order ``Ln, .., L0, embed`` — each group is
-             re-fetched and its vjp recomputes the group forward from the
-             saved boundary activation (activation checkpointing at group
+  backward   **reverse** fetch order — each unit's groups are re-fetched
+             and the unit vjp recomputes its forward from the saved
+             boundary activation (activation checkpointing at unit
              granularity), so backward peak residency equals forward's.
   optimizer  home order; each group streams ``{grads, moments}`` H2D and
              its updated ``{params, moments}`` ride ONE pipelined D2H
-             drain back to the home kind (the params writeback shares the
-             drain with the streamed-AdamW moments).
+             drain back to the home kind.
+
+Route-aware decode (``expert_stream``): the decode program fetches only a
+layer's non-expert group through the pipeline, runs the router first, and
+then fetches just the routed top-k experts' groups — the all-expert fetch
+never happens, and the expert-granular residency cache keeps hot experts
+device-resident across steps.
 
 The plan is also the **device-budget model**: ``peak_device_bytes(d)`` is
-the sliding-window maximum of ``d + 2`` consecutive fetch-group byte
-counts (``d`` prefetched + 1 landing + 1 being consumed), and
+the sliding-window maximum of ``d + 2`` consecutive stream-unit byte
+counts (``d`` prefetched + 1 landing + 1 being consumed; a ``moe`` unit
+counts all its groups since train/prefill hold them together), and
 ``max_distance_for_budget`` caps the adaptive prefetch window so the
 streamed residency can never exceed ``--device-budget-mb`` no matter what
 the controller learns.  Both take a ``cached_bytes`` term for the
-:class:`~repro.core.residency.ResidencyCache` that keeps recently fetched
-groups device-resident: window + cached bytes share one budget, and
-``residency_capacity_bytes`` is the slack left above the widest allowed
-window — the cache's byte ceiling (zero slack = cache inert = the plain
-streaming schedule).
+:class:`~repro.core.residency.ResidencyCache`; ``residency_capacity_bytes``
+is the slack left above the widest allowed window.
 
 Where data lives never changes what is computed: every consumer runs the
 same jitted per-group programs on the same values for every kind, so
@@ -50,15 +66,20 @@ streamed runs are bitwise-equal to the device-resident run (gated in
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "WeightGroup",
+    "StreamUnit",
     "WeightStreamPlan",
+    "WeightStreamSupport",
+    "weight_stream_support",
     "weight_stream_supported",
+    "merge_expert_slice",
     "PARAM_KINDS",
 ]
 
@@ -70,21 +91,70 @@ PARAM_KINDS = ("device", "pinned_host", "disk_host")
 #: spill-store key namespace for parameter group chunks
 _KEY_PREFIX = "wp"
 
+#: expert tensor names inside a block's ``moe`` subtree (wg only for gated)
+_EXPERT_NAMES = ("wi", "wo", "wg")
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightStreamSupport:
+    """Reasoned support report for streaming an arch's parameters.
+
+    ``supported`` covers the train path; ``serve_supported`` the decode
+    path (heterogeneous layouts stream for train but their decode state is
+    not group-pageable).  ``reason`` / ``serve_reason`` say why not —
+    surfaced verbatim by the CLI ``--param-kind`` rejection errors."""
+
+    supported: bool
+    layout: str  # "uniform" | "period" | "unrolled" | ""
+    reason: str = ""
+    serve_supported: bool = False
+    serve_reason: str = ""
+
+    def __bool__(self) -> bool:
+        return self.supported
+
+
+def weight_stream_support(cfg) -> WeightStreamSupport:
+    """Layout-aware support report: which group program (if any) can
+    stream this arch's parameters, and why not where it can't."""
+    if cfg.n_layers < 1:
+        r = (
+            f"{cfg.name}: weight streaming needs at least one block layer "
+            f"(n_layers={cfg.n_layers})"
+        )
+        return WeightStreamSupport(False, "", r, False, r)
+    if cfg.uniform_blocks and cfg.use_scan:
+        return WeightStreamSupport(True, "uniform", "", True, "")
+    layout = "period" if cfg.period_scan else "unrolled"
+    serve_reason = (
+        f"{cfg.name}: streamed serving requires uniform scanned blocks — "
+        f"the {layout} layout's per-block decode state is not "
+        "group-pageable; train-side streaming is supported via "
+        f"{layout} group programs"
+    )
+    return WeightStreamSupport(True, layout, "", False, serve_reason)
+
 
 def weight_stream_supported(cfg) -> bool:
-    """True iff the arch's parameters can stream layer-group-wise: uniform
-    blocks executed as a scan over stacked ``(L, ...)`` leaves.  Hetero
-    (hybrid/ssm) stacks would need per-kind group programs — they keep the
-    device-resident path."""
-    return bool(cfg.uniform_blocks and cfg.use_scan)
+    """Boolean view of :func:`weight_stream_support` (train path)."""
+    return weight_stream_support(cfg).supported
 
 
 def _tree_bytes(tree: Pytree) -> int:
-    return sum(
-        int(np.prod(np.shape(x), dtype=np.int64))
-        * np.dtype(getattr(x, "dtype", np.float32)).itemsize
-        for x in jax.tree.leaves(tree)
-    )
+    """Exact byte count of a pytree of shaped, dtyped leaves.  A leaf
+    without a dtype is a hard error: silently assuming float32 would
+    under-count the device budget for wider types."""
+    total = 0
+    for path, x in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        dt = getattr(x, "dtype", None)
+        if dt is None:
+            raise TypeError(
+                "byte accounting needs a dtype on every leaf; leaf "
+                f"{jax.tree_util.keystr(path)!r} ({type(x).__name__}) has "
+                "none"
+            )
+        total += int(np.prod(np.shape(x), dtype=np.int64)) * np.dtype(dt).itemsize
+    return total
 
 
 def _to_host(x):
@@ -108,31 +178,66 @@ class WeightGroup:
 
     index: int
     key: str  # pytree key in the home dict (sorted == home order)
-    kind: str  # "embed" | "layers" | "head"
-    lo: int = 0  # layer range for kind == "layers"
+    kind: str  # "embed" | "layers" | "expert" | "period" | "block" | "head"
+    lo: int = 0  # absolute layer range covered by the group
     hi: int = 0
+    expert: int = -1  # expert index for kind == "expert"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamUnit:
+    """One compute stage of the stream program: the tuple of group indices
+    a single jitted stage call consumes (a ``moe`` unit spans the layer's
+    non-expert group plus its expert groups; other kinds are 1:1)."""
+
+    kind: str  # "layers" | "moe" | "period" | "block"
+    gidx: tuple  # indices into plan.groups, fetch order
+    lo: int  # absolute layer range
+    hi: int
+
+
+def merge_expert_slice(ne: Pytree, experts: Sequence[Pytree]) -> Pytree:
+    """Rebuild a stacked one-layer block slice from a non-expert group and
+    its per-expert groups: each expert leaf ``(1, d, f)`` gains an expert
+    axis and the stack concatenates to ``(1, E, d, f)`` — bitwise-identical
+    to the slice the un-split layer group would have carried.  jnp-based so
+    it runs inside the jitted stage (device-side, no host round trip)."""
+    moe = dict(ne["moe"])
+    for name in experts[0]:
+        moe[name] = jnp.concatenate([e[name][:, None] for e in experts], axis=1)
+    out = dict(ne)
+    out["moe"] = moe
+    return out
 
 
 class WeightStreamPlan:
-    """Partition of a model parameter tree into transfer groups.
+    """Partition of a model parameter tree into a typed group program.
 
     Parameters
     ----------
     cfg:
         the :class:`~repro.configs.base.ModelConfig` (must satisfy
-        :func:`weight_stream_supported`).
+        :func:`weight_stream_support`).
     abstract_params:
         ``jax.eval_shape`` tree of the *compute-dtype* params (what
         ``repro.train.steps.abstract_params`` returns) — shapes/dtypes
         drive the byte accounting and the group templates.
     layers_per_group:
-        layers per stacked layer group.  ``None`` picks the largest count
-        whose distance-1 peak fits ``device_budget_mb`` (falling back to 1).
+        stream units per middle group — layers for the uniform/unrolled
+        layouts, period-units for the period layout (each period-unit is
+        ``cfg.scan_period`` layers).  ``None`` picks the largest count
+        whose distance-1 peak fits ``device_budget_mb`` (falling back
+        to 1).  Forced to 1 by ``expert_stream``.
     device_budget_mb:
         device-residency budget for streamed weights.  Enforced two ways:
-        construction fails if even ``layers_per_group=1`` at distance 1
+        construction fails if even the smallest grouping at distance 1
         cannot fit, and :meth:`max_distance_for_budget` caps the prefetch
         window at run time.  ``None`` = unbounded.
+    expert_stream:
+        split each MoE layer into a non-expert group (router + attention +
+        norms) plus one group per routed expert, enabling route-aware
+        decode fetches and an expert-granular residency cache.  Requires
+        an MoE config with the uniform layout.
     """
 
     def __init__(
@@ -142,16 +247,30 @@ class WeightStreamPlan:
         *,
         layers_per_group: Optional[int] = None,
         device_budget_mb: Optional[float] = None,
+        expert_stream: bool = False,
     ) -> None:
-        if not weight_stream_supported(cfg):
-            raise ValueError(
-                f"{cfg.name}: weight streaming requires uniform scanned "
-                "blocks (hybrid/ssm stacks keep the device-resident path)"
-            )
+        support = weight_stream_support(cfg)
+        if not support.supported:
+            raise ValueError(support.reason)
         if "blocks" not in abstract_params:
             raise ValueError("param tree has no 'blocks' subtree")
         self.cfg = cfg
+        self.support = support
+        self.layout = support.layout
         self.n_layers = cfg.n_layers
+        self.scan_period = cfg.scan_period
+        if expert_stream:
+            if self.layout != "uniform":
+                raise ValueError(
+                    f"{cfg.name}: --expert-stream needs the uniform layout "
+                    f"(this arch streams via {self.layout} group programs)"
+                )
+            if not cfg.n_experts:
+                raise ValueError(
+                    f"{cfg.name}: --expert-stream requires an MoE config "
+                    "(n_experts == 0)"
+                )
+        self.expert_stream = bool(expert_stream)
         keys = set(abstract_params)
         self.embed_keys = tuple(k for k in ("embed", "vision") if k in keys)
         self.head_home_keys = tuple(k for k in ("ln_f", "head") if k in keys)
@@ -180,30 +299,61 @@ class WeightStreamPlan:
             self.embed_bytes + head_home_bytes + total_block_bytes
         )
 
+        # ---- layout-specific byte model (exact: stacked leaves divide
+        # evenly along the stacking axis, named blocks are counted per tree)
+        self.expert_names: tuple = ()
+        self.per_expert_bytes = 0
+        self.nonexpert_layer_bytes = self.per_layer_bytes
+        self._block_bytes: dict = {}  # named-block layouts: name -> bytes
+        tail_bytes = 0
+        if self.layout == "uniform":
+            if self.expert_stream:
+                moe_abs = blocks_abs["moe"]
+                self.expert_names = tuple(
+                    n for n in _EXPERT_NAMES if n in moe_abs
+                )
+                expert_total = _tree_bytes(
+                    {n: moe_abs[n] for n in self.expert_names}
+                )
+                self.per_expert_bytes = expert_total // (
+                    self.n_layers * cfg.n_experts
+                )
+                self.nonexpert_layer_bytes = (
+                    self.per_layer_bytes - cfg.n_experts * self.per_expert_bytes
+                )
+            unit_bytes = [self.per_layer_bytes] * self.n_layers
+        elif self.layout == "period":
+            p = self.scan_period
+            self._n_full = self.n_layers // p
+            periods_bytes = _tree_bytes(blocks_abs["periods"])
+            unit_bytes = [periods_bytes // self._n_full] * self._n_full
+            self._tail_names = tuple(
+                f"tail_{k}" for k in range(self.n_layers - self._n_full * p)
+            )
+            for name in self._tail_names:
+                self._block_bytes[name] = _tree_bytes(blocks_abs[name])
+            tail_bytes = sum(self._block_bytes.values())
+        else:  # unrolled
+            names = [f"layer_{i:03d}" for i in range(self.n_layers)]
+            for name in names:
+                self._block_bytes[name] = _tree_bytes(blocks_abs[name])
+            unit_bytes = [self._block_bytes[n] for n in names]
+        self._unit_bytes = unit_bytes
+        self._tail_unit_bytes = tail_bytes
+
         budget = (
             int(device_budget_mb * 1e6) if device_budget_mb is not None else None
         )
         self.device_budget_bytes = budget
-        if layers_per_group is None:
+        if self.expert_stream:
+            layers_per_group = 1
+        elif layers_per_group is None:
             layers_per_group = self._fit_layers_per_group(budget)
         if layers_per_group < 1:
             raise ValueError("layers_per_group must be >= 1")
-        self.layers_per_group = min(layers_per_group, self.n_layers)
+        self.layers_per_group = min(layers_per_group, len(unit_bytes))
 
-        groups: list[WeightGroup] = []
-        groups.append(WeightGroup(0, "g000_embed", "embed"))
-        lo = 0
-        while lo < self.n_layers:
-            hi = min(lo + self.layers_per_group, self.n_layers)
-            i = len(groups)
-            groups.append(
-                WeightGroup(i, f"g{i:03d}_layers_{lo:03d}_{hi:03d}", "layers", lo, hi)
-            )
-            lo = hi
-        groups.append(WeightGroup(len(groups), f"g{len(groups):03d}_head", "head"))
-        self.groups = tuple(groups)
-        self.layer_groups = tuple(g for g in groups if g.kind == "layers")
-        self.n_groups = len(groups)
+        self._build_groups()
 
         if budget is not None and self.peak_device_bytes(1) > budget:
             raise ValueError(
@@ -213,29 +363,109 @@ class WeightStreamPlan:
                 f"layers_per_group={self.layers_per_group}); raise the budget"
             )
 
-    # ------------------------------------------------------------ byte model
-    @staticmethod
-    def _window_peak(
-        embed_bytes: int,
-        head_fetch_bytes: int,
-        per_layer_bytes: int,
-        n_layers: int,
-        lpg: int,
-        distance: int,
-    ) -> int:
-        """Sliding-window residency peak for a hypothetical ``lpg`` —
-        shared by :meth:`peak_device_bytes` and the auto group-sizing so
-        the fit can never pick a group size the validation then rejects."""
-        seq = [embed_bytes]
-        lo = 0
-        while lo < n_layers:
-            hi = min(lo + lpg, n_layers)
-            seq.append((hi - lo) * per_layer_bytes)
-            lo = hi
-        seq.append(head_fetch_bytes)
-        w = max(1, distance + 2)
-        return max(sum(seq[i : min(i + w, len(seq))]) for i in range(len(seq)))
+    # --------------------------------------------------------- group program
+    def _build_groups(self) -> None:
+        groups: list[WeightGroup] = [WeightGroup(0, "g000_embed", "embed")]
+        units: list[StreamUnit] = []
+        names_map: dict = {}
+        if self.layout == "uniform" and self.expert_stream:
+            E = self.cfg.n_experts
+            for l in range(self.n_layers):
+                i = len(groups)
+                groups.append(
+                    WeightGroup(
+                        i, f"g{i:03d}_layers_{l:03d}_{l + 1:03d}", "layers", l, l + 1
+                    )
+                )
+                gidx = [i]
+                for e in range(E):
+                    i = len(groups)
+                    groups.append(
+                        WeightGroup(
+                            i,
+                            f"g{i:03d}_expert_{l:03d}_{l + 1:03d}_e{e:02d}",
+                            "expert",
+                            l,
+                            l + 1,
+                            expert=e,
+                        )
+                    )
+                    gidx.append(i)
+                units.append(StreamUnit("moe", tuple(gidx), l, l + 1))
+        elif self.layout == "uniform":
+            lo = 0
+            while lo < self.n_layers:
+                hi = min(lo + self.layers_per_group, self.n_layers)
+                i = len(groups)
+                groups.append(
+                    WeightGroup(
+                        i, f"g{i:03d}_layers_{lo:03d}_{hi:03d}", "layers", lo, hi
+                    )
+                )
+                units.append(StreamUnit("layers", (i,), lo, hi))
+                lo = hi
+        elif self.layout == "period":
+            p = self.scan_period
+            lo_u = 0
+            while lo_u < self._n_full:
+                hi_u = min(lo_u + self.layers_per_group, self._n_full)
+                i = len(groups)
+                groups.append(
+                    WeightGroup(
+                        i,
+                        f"g{i:03d}_period_{lo_u * p:03d}_{hi_u * p:03d}",
+                        "period",
+                        lo_u * p,
+                        hi_u * p,
+                    )
+                )
+                units.append(StreamUnit("period", (i,), lo_u * p, hi_u * p))
+                lo_u = hi_u
+            if self._tail_names:
+                i = len(groups)
+                lo = self._n_full * p
+                g = WeightGroup(
+                    i, f"g{i:03d}_block_{lo:03d}_{self.n_layers:03d}", "block",
+                    lo, self.n_layers,
+                )
+                groups.append(g)
+                units.append(StreamUnit("block", (i,), lo, self.n_layers))
+                names_map[g.key] = self._tail_names
+        else:  # unrolled
+            lo = 0
+            while lo < self.n_layers:
+                hi = min(lo + self.layers_per_group, self.n_layers)
+                i = len(groups)
+                g = WeightGroup(
+                    i, f"g{i:03d}_block_{lo:03d}_{hi:03d}", "block", lo, hi
+                )
+                groups.append(g)
+                units.append(StreamUnit("block", (i,), lo, hi))
+                names_map[g.key] = tuple(
+                    f"layer_{j:03d}" for j in range(lo, hi)
+                )
+                lo = hi
+        groups.append(
+            WeightGroup(len(groups), f"g{len(groups):03d}_head", "head")
+        )
+        self.groups = tuple(groups)
+        self.units = tuple(units)
+        self.layer_groups = tuple(g for g in groups if g.kind == "layers")
+        self.expert_groups = tuple(g for g in groups if g.kind == "expert")
+        self.n_groups = len(groups)
+        self._block_names_map = names_map
 
+    def block_names(self, g: WeightGroup) -> tuple:
+        """The named-block keys a ``block`` group homes."""
+        return self._block_names_map[g.key]
+
+    def experts_for_layer(self, lo: int) -> tuple:
+        """The expert groups of the layer starting at ``lo`` (fetch order)."""
+        return tuple(
+            g for g in self.expert_groups if g.lo == lo
+        )
+
+    # ------------------------------------------------------------ byte model
     def group_bytes(self, g: WeightGroup, *, fetch: bool = True) -> int:
         if g.kind == "embed":
             return self.embed_bytes
@@ -244,15 +474,39 @@ class WeightStreamPlan:
             # embed TABLE, not the whole embed group — vision towers ride
             # the embed group but are never re-read at the head stage)
             return self.head_fetch_bytes if fetch else self.head_home_bytes
-        return (g.hi - g.lo) * self.per_layer_bytes
+        if g.kind == "expert":
+            return self.per_expert_bytes
+        if g.kind == "layers":
+            return (g.hi - g.lo) * self.nonexpert_layer_bytes
+        if g.kind == "period":
+            n_units = (g.hi - g.lo) // self.scan_period
+            return n_units * self._unit_bytes[0]
+        return sum(self._block_bytes[n] for n in self.block_names(g))
 
     def fetch_sequence_bytes(self) -> list[int]:
         """Per-group H2D bytes in forward fetch order."""
         return [self.group_bytes(g) for g in self.groups]
 
+    def _window_sequence_bytes(self) -> list[int]:
+        """Per-STAGE bytes for the residency window model.  A ``moe`` unit's
+        groups are consumed together by train/prefill (the merged stage
+        holds the non-expert slice plus every expert), so the unit counts
+        as one window element of their summed bytes — decode's routed
+        subset only ever uses less."""
+        seq = [self.embed_bytes]
+        for u in self.units:
+            seq.append(sum(self.group_bytes(self.groups[i]) for i in u.gidx))
+        seq.append(self.head_fetch_bytes)
+        return seq
+
+    @staticmethod
+    def _window_max(seq: list, distance: int) -> int:
+        w = max(1, distance + 2)
+        return max(sum(seq[i : min(i + w, len(seq))]) for i in range(len(seq)))
+
     def peak_device_bytes(self, distance: int, cached_bytes: int = 0) -> int:
-        """Streamed-weight residency model: with ``distance`` groups
-        prefetched, at most ``distance + 2`` consecutive fetch groups are
+        """Streamed-weight residency model: with ``distance`` stages
+        prefetched, at most ``distance + 2`` consecutive stream units are
         device-resident at once (in flight + landing + being consumed).
         The backward pass walks the same sequence reversed, so the same
         sliding-window maximum bounds both passes.
@@ -262,21 +516,24 @@ class WeightStreamPlan:
         not see (a cache hit transfers zero bytes, so it never lands in
         the window term — the sum is a conservative bound, never an
         undercount)."""
-        seq = self.fetch_sequence_bytes()
-        w = max(1, distance + 2)
-        return cached_bytes + max(
-            sum(seq[i : min(i + w, len(seq))]) for i in range(len(seq))
+        return cached_bytes + self._window_max(
+            self._window_sequence_bytes(), distance
         )
 
-    def _peak_for_lpg(self, lpg: int, distance: int) -> int:
-        return self._window_peak(
-            self.embed_bytes,
-            self.head_fetch_bytes,
-            self.per_layer_bytes,
-            self.n_layers,
-            lpg,
-            distance,
-        )
+    def _peak_for_grouping(self, upg: int, distance: int) -> int:
+        """Residency peak for a hypothetical units-per-group — shared by
+        :meth:`peak_device_bytes` semantics and the auto group-sizing so
+        the fit can never pick a group size the validation then rejects."""
+        seq = [self.embed_bytes]
+        lo = 0
+        while lo < len(self._unit_bytes):
+            hi = min(lo + upg, len(self._unit_bytes))
+            seq.append(sum(self._unit_bytes[lo:hi]))
+            lo = hi
+        if self._tail_unit_bytes:
+            seq.append(self._tail_unit_bytes)
+        seq.append(self.head_fetch_bytes)
+        return self._window_max(seq, distance)
 
     def max_distance_for_budget(self, cap: int = 8, cached_bytes: int = 0) -> int:
         """Largest prefetch distance whose modeled peak fits the budget —
@@ -311,34 +568,57 @@ class WeightStreamPlan:
         )
 
     def _fit_layers_per_group(self, budget: Optional[int]) -> int:
+        n = len(self._unit_bytes)
         if budget is None:
-            return max(1, self.n_layers // 4)
-        for lpg in range(self.n_layers, 1, -1):
+            return max(1, n // 4)
+        for upg in range(n, 1, -1):
             # the EXACT distance-1 sliding-window peak (not a per-group
             # approximation — a window holds up to 3 consecutive groups)
-            if self._peak_for_lpg(lpg, 1) <= budget:
-                return lpg
+            if self._peak_for_grouping(upg, 1) <= budget:
+                return upg
         return 1
 
     def grouping(self) -> list[dict]:
-        """JSON-serializable description of the group partition.  Recorded
+        """JSON-serializable description of the group program.  Recorded
         in checkpoint/run metadata; the elastic resharder compares it (via
         the group keys, which encode kind + layer bounds) against a
         restored checkpoint's to decide whether host/disk-homed state must
         be re-partitioned."""
         return [
-            {"key": g.key, "kind": g.kind, "lo": g.lo, "hi": g.hi}
+            {"key": g.key, "kind": g.kind, "lo": g.lo, "hi": g.hi,
+             "expert": g.expert}
             for g in self.groups
         ]
 
     # ------------------------------------------------------------- slicing
+    def _strip_experts(self, tree: Pytree) -> Pytree:
+        """A block slice minus the routed-expert tensors (router kept)."""
+        out = {k: v for k, v in tree.items() if k != "moe"}
+        out["moe"] = {
+            k: v for k, v in tree["moe"].items() if k not in self.expert_names
+        }
+        return out
+
     def home_group(self, params: Pytree, g: WeightGroup) -> Pytree:
         """The group's slice of a *full* param tree (views, no copies)."""
         if g.kind == "embed":
             return {k: params[k] for k in self.embed_keys}
         if g.kind == "head":
             return {k: params[k] for k in self.head_home_keys}
-        return jax.tree.map(lambda a: a[g.lo : g.hi], params["blocks"])
+        if g.kind == "expert":
+            moe = params["blocks"]["moe"]
+            return {
+                n: moe[n][g.lo : g.hi, g.expert] for n in self.expert_names
+            }
+        if g.kind == "period":
+            p = self.scan_period
+            return jax.tree.map(
+                lambda a: a[g.lo // p : g.hi // p], params["blocks"]["periods"]
+            )
+        if g.kind == "block":
+            return {n: params["blocks"][n] for n in self.block_names(g)}
+        sl = jax.tree.map(lambda a: a[g.lo : g.hi], params["blocks"])
+        return self._strip_experts(sl) if self.expert_stream else sl
 
     def init_home(self, params: Pytree) -> dict:
         """Home representation: ``{"groups": {key: group_tree}}`` with
@@ -352,17 +632,46 @@ class WeightStreamPlan:
         }
 
     def assemble(self, home: dict) -> Pytree:
-        """Full host param tree from a home (layer groups concatenated) —
-        for conversion/export; the streamed paths never call this."""
+        """Full host param tree from a home (sliced groups concatenated,
+        expert groups restacked) — for conversion/export; the streamed
+        paths never call this."""
+        cat = lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0)
         out: dict = {}
         for g in self.groups:
-            if g.kind == "layers":
-                continue
-            out.update({k: v for k, v in home["groups"][g.key].items()})
-        parts = [home["groups"][g.key] for g in self.layer_groups]
-        out["blocks"] = jax.tree.map(
-            lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0), *parts
-        )
+            if g.kind in ("embed", "head"):
+                out.update({k: v for k, v in home["groups"][g.key].items()})
+        if self.layout == "uniform" and self.expert_stream:
+            layer_parts = []
+            for u in self.units:
+                ne = home["groups"][self.groups[u.gidx[0]].key]
+                experts = [home["groups"][self.groups[i].key] for i in u.gidx[1:]]
+                moe = dict(ne["moe"])
+                for name in self.expert_names:
+                    moe[name] = np.concatenate(
+                        [np.asarray(e[name])[:, None] for e in experts], axis=1
+                    )
+                merged = dict(ne)
+                merged["moe"] = moe
+                layer_parts.append(merged)
+            out["blocks"] = jax.tree.map(cat, *layer_parts)
+        elif self.layout == "uniform":
+            parts = [home["groups"][g.key] for g in self.layer_groups]
+            out["blocks"] = jax.tree.map(cat, *parts)
+        elif self.layout == "period":
+            parts = [
+                home["groups"][g.key] for g in self.groups if g.kind == "period"
+            ]
+            blocks = {"periods": jax.tree.map(cat, *parts)}
+            for g in self.groups:
+                if g.kind == "block":
+                    blocks.update(home["groups"][g.key])
+            out["blocks"] = blocks
+        else:  # unrolled
+            blocks = {}
+            for g in self.groups:
+                if g.kind == "block":
+                    blocks.update(home["groups"][g.key])
+            out["blocks"] = blocks
         return out
 
     # ------------------------------------------------------------- fetching
@@ -422,40 +731,60 @@ class WeightStreamPlan:
         return home, embed
 
     # ------------------------------------------------------------ shardings
+    @staticmethod
+    def _drop_expert_axis(sh):
+        """Sharding for an expert group's ``(1, d, f)`` leaves derived from
+        the stacked ``(L, E, d, f)`` leaf's sharding: drop the expert-axis
+        spec entry (axis 1), keep the rest."""
+        spec = list(sh.spec)
+        if len(spec) > 1:
+            spec.pop(1)
+        return jax.sharding.NamedSharding(
+            sh.mesh, jax.sharding.PartitionSpec(*spec)
+        )
+
+    def _group_sharding(self, g: WeightGroup, p_shardings, *, fetch: bool):
+        if g.kind == "embed":
+            return {k: p_shardings[k] for k in self.embed_keys}
+        if g.kind == "head":
+            tree = {k: p_shardings[k] for k in self.head_home_keys}
+            if fetch and self.head_reads_embed:
+                tree = dict(tree)
+                tree["embed"] = p_shardings["embed"]
+            return tree
+        if g.kind == "expert":
+            moe = p_shardings["blocks"]["moe"]
+            return {
+                n: self._drop_expert_axis(moe[n]) for n in self.expert_names
+            }
+        if g.kind == "period":
+            return p_shardings["blocks"]["periods"]
+        if g.kind == "block":
+            return {n: p_shardings["blocks"][n] for n in self.block_names(g)}
+        if self.expert_stream:
+            return self._strip_experts(p_shardings["blocks"])
+        return p_shardings["blocks"]
+
     def group_shardings(self, p_shardings: Optional[Pytree]):
         """Per-fetch-group sharding trees from a full-params sharding tree
         (slicing a stacked leaf keeps its rank, so the blocks leaf sharding
-        applies to every layer-group slice unchanged)."""
+        applies to every sliced group unchanged; expert groups drop the
+        expert-axis spec entry)."""
         if p_shardings is None:
             return None
-        out = []
-        for g in self.groups:
-            if g.kind == "embed":
-                out.append({k: p_shardings[k] for k in self.embed_keys})
-            elif g.kind == "head":
-                tree = {k: p_shardings[k] for k in self.head_home_keys}
-                if self.head_reads_embed:
-                    tree = dict(tree)
-                    tree["embed"] = p_shardings["embed"]
-                out.append(tree)
-            else:
-                out.append(p_shardings["blocks"])
-        return out
+        return [
+            self._group_sharding(g, p_shardings, fetch=True) for g in self.groups
+        ]
 
     def home_group_shardings(self, p_shardings: Optional[Pytree]):
         """Home-order sharding trees (no tied-embed aliasing) — the layout
         the optimizer phase stages grads/moments at."""
         if p_shardings is None:
             return None
-        out = []
-        for g in self.groups:
-            if g.kind == "embed":
-                out.append({k: p_shardings[k] for k in self.embed_keys})
-            elif g.kind == "head":
-                out.append({k: p_shardings[k] for k in self.head_home_keys})
-            else:
-                out.append(p_shardings["blocks"])
-        return out
+        return [
+            self._group_sharding(g, p_shardings, fetch=False)
+            for g in self.groups
+        ]
 
     # ------------------------------------------------------------- spilling
     def spill_key(self, g: WeightGroup) -> str:
@@ -503,7 +832,9 @@ class WeightStreamPlan:
 
     def __repr__(self) -> str:  # pragma: no cover - trivial
         return (
-            f"WeightStreamPlan({self.cfg.name}, n_groups={self.n_groups}, "
+            f"WeightStreamPlan({self.cfg.name}, layout={self.layout}, "
+            f"n_groups={self.n_groups}, "
             f"layers_per_group={self.layers_per_group}, "
+            f"expert_stream={self.expert_stream}, "
             f"total={self.total_param_bytes / 1e6:.1f}MB)"
         )

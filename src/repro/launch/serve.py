@@ -131,6 +131,8 @@ class ServeSession:
         param_layers_per_group: Optional[int] = None,
         param_distance=AUTO,
         param_cache_mb: Optional[float] = None,
+        expert_stream: bool = False,
+        route_experts: bool = True,
     ) -> None:
         self.cfg = cfg
         self.mesh = mesh
@@ -161,18 +163,37 @@ class ServeSession:
         # construction validates the budget and can raise)
         self._wplan = None
         engine_cfg = None
+        if expert_stream and param_kind == "device":
+            raise ValueError(
+                "--expert-stream streams routed experts from a weight home; "
+                "it requires --param-kind pinned_host or disk_host"
+            )
+        #: expert-group fetch accounting (route-aware MoE streaming) —
+        #: separate from ``param_stats`` so the bench can gate routed vs
+        #: all-expert link traffic directly
+        self.expert_stats: Optional[StreamStats] = None
         #: weight-residency group cache — keeps fetched weight groups
         #: device-resident across prefill/decode steps (serve params are
         #: immutable, so entries are never invalidated, only LRU-evicted)
         self.param_residency: Optional[ResidencyCache] = None
         if param_kind != "device":
             from repro.core.engine import EngineConfig
-            from repro.core.weightstream import PARAM_KINDS, WeightStreamPlan
+            from repro.core.weightstream import (
+                PARAM_KINDS,
+                WeightStreamPlan,
+                weight_stream_support,
+            )
 
             if param_kind not in PARAM_KINDS:
                 raise ValueError(
                     f"unknown param_kind {param_kind!r}; expected one of "
                     f"{PARAM_KINDS}"
+                )
+            support = weight_stream_support(cfg)
+            if not support.serve_supported:
+                raise ValueError(
+                    f"--param-kind {param_kind}: "
+                    f"{support.serve_reason or support.reason}"
                 )
             budget = device_budget_mb
             if budget is not None:
@@ -197,6 +218,7 @@ class ServeSession:
                 st.abstract_params(cfg),
                 layers_per_group=param_layers_per_group,
                 device_budget_mb=budget,
+                expert_stream=expert_stream,
             )
             # weight-residency cache capacity: default = the budget slack
             # above the widest prefetch window (None budget = unbounded);
@@ -332,7 +354,9 @@ class ServeSession:
                     engine=self._engine, stats=self.param_stats,
                     param_shardings=p_sh, paged=True, prefetch=param_pf,
                     residency=self.param_residency,
+                    route_experts=route_experts,
                 )
+                self.expert_stats = getattr(self._step, "expert_stats", None)
             else:
                 self._prefill = jax.jit(
                     st.make_prefill_step(cfg, 1, self.max_len, mesh, self.sharder)
@@ -548,6 +572,14 @@ def _serve_unpaged(
     engine: Optional[TransferEngine],
     warmup: bool,
     stats: StreamStats,
+    param_kind: str = "device",
+    device_budget_mb: Optional[float] = None,
+    param_layers_per_group: Optional[int] = None,
+    param_distance=AUTO,
+    param_cache_mb: Optional[float] = None,
+    expert_stream: bool = False,
+    route_experts: bool = True,
+    spill_dir: Optional[str] = None,
 ):
     """The pre-pager schedule, kept as the A/B baseline: host-resident
     caches round-trip through host memory synchronously on every decode
@@ -562,11 +594,15 @@ def _serve_unpaged(
     two paths are bitwise-comparable.  Ring/recurrent caches (``slot_pos``
     is shared across the batch) keep the seed's lock-step schedule: one
     batched prefill, one scalar position.
+
+    ``param_kind`` homes the weights off-device and streams them through
+    the group-program executables (``paged=False`` decode) — the route for
+    archs whose KV cache is NOT pageable (SWA rings like mixtral) but whose
+    weights should still stream; ``expert_stream`` fetches only the routed
+    experts per decode step.
     """
     plan = sh.make_plan(mesh, mode="serve")
     key = jax.random.PRNGKey(seed)
-    params = st.init_train_state(key, cfg)[0]
-    sharder = sh.make_sharder(plan, params, batch)
     kind = mk.as_kind(kv_kind)
     if kind == mk.DISK_HOST:
         raise ValueError("the unpaged path has no disk home; use --kv-page-len > 0")
@@ -574,12 +610,104 @@ def _serve_unpaged(
 
     max_len = prompt_len + gen
     vector_pos = paged_cache_supported(st.abstract_caches(cfg, 1, max_len))
-    # donation is only safe when the cache stays on device: the host branch
-    # re-reads the pre-step tree to place it (satellite bugfix)
-    decode_fn = jax.jit(
-        st.make_decode_step(cfg, mesh, sharder),
-        donate_argnums=(1,) if device_resident else (),
-    )
+
+    wplan = None
+    param_stats = StreamStats()
+    expert_stats = None
+    residency = None
+    param_store = None
+    own_engine = None
+    #: KV round-trip emulation stays tied to the CALLER's engine — an
+    #: engine created here for the weight stream must not add synthetic
+    #: stalls to the cache path
+    kv_engine = engine
+    if param_kind != "device":
+        from repro.core.engine import EngineConfig
+        from repro.core.weightstream import (
+            PARAM_KINDS,
+            WeightStreamPlan,
+            weight_stream_support,
+        )
+
+        if param_kind not in PARAM_KINDS:
+            raise ValueError(
+                f"unknown param_kind {param_kind!r}; expected one of "
+                f"{PARAM_KINDS}"
+            )
+        support = weight_stream_support(cfg)
+        if not support.serve_supported:
+            raise ValueError(
+                f"--param-kind {param_kind}: "
+                f"{support.serve_reason or support.reason}"
+            )
+        wplan = WeightStreamPlan(
+            cfg,
+            st.abstract_params(cfg),
+            layers_per_group=param_layers_per_group,
+            device_budget_mb=device_budget_mb,
+            expert_stream=expert_stream,
+        )
+        cache_cap = (
+            wplan.residency_capacity_bytes()
+            if param_cache_mb is None
+            else int(param_cache_mb * 1e6)
+        )
+        residency = ResidencyCache(cache_cap)
+        if engine is None:
+            engine = own_engine = TransferEngine(
+                EngineConfig(max_distance=wplan.max_distance_for_budget())
+            )
+        sharder = sh.make_sharder(plan, st.abstract_params(cfg), batch)
+        params = st.init_weight_streamed_params(key, cfg, wplan)
+        if param_kind == "disk_host":
+            import tempfile
+
+            pd = (
+                str(Path(spill_dir) / "params")
+                if spill_dir is not None
+                else tempfile.mkdtemp(prefix="repro-serve-wp-")
+            )
+            param_store = SpillStore(pd, ephemeral=True)
+            try:
+                params = wplan.spill_home(params, param_store)
+            except BaseException:
+                param_store.close()
+                raise
+    else:
+        if expert_stream:
+            raise ValueError(
+                "--expert-stream streams routed experts from a weight home; "
+                "it requires --param-kind pinned_host or disk_host"
+            )
+        params = st.init_train_state(key, cfg)[0]
+        sharder = sh.make_sharder(plan, params, batch)
+
+    if wplan is not None:
+        p_sh = None
+        if mesh.devices.size > 1:
+            p_specs = sh.param_specs(plan, st.abstract_params(cfg))
+            p_sh = sh.named_shardings(mesh, p_specs)
+        from repro.core.refspec import PrefetchSpec
+
+        w_dist = (
+            param_distance if param_distance == AUTO else int(param_distance)
+        )
+        param_pf = PrefetchSpec(
+            buffer_size=wplan.n_groups + 2, distance=w_dist
+        )
+        decode_fn = st.make_weight_streamed_decode_step(
+            cfg, wplan, mesh, sharder, engine=engine, stats=param_stats,
+            param_shardings=p_sh, paged=False, prefetch=param_pf,
+            residency=residency, route_experts=route_experts,
+        )
+        expert_stats = getattr(decode_fn, "expert_stats", None)
+    else:
+        # donation is only safe when the cache stays on device: the host
+        # branch re-reads the pre-step tree to place it (satellite bugfix)
+        decode_fn = jax.jit(
+            st.make_decode_step(cfg, mesh, sharder),
+            donate_argnums=(1,) if device_resident else (),
+        )
     argmax_fn = jax.jit(
         lambda logits: jnp.argmax(logits[..., -1, :], axis=-1).astype(jnp.int32)
     )
@@ -591,7 +719,16 @@ def _serve_unpaged(
 
     t0 = time.perf_counter()
     if vector_pos:
-        prefill_fn = jax.jit(st.make_prefill_step(cfg, 1, max_len, mesh, sharder))
+        if wplan is not None:
+            prefill_fn = st.make_weight_streamed_prefill_step(
+                cfg, wplan, 1, max_len, mesh, sharder, engine=engine,
+                stats=param_stats, param_shardings=p_sh, prefetch=param_pf,
+                residency=residency,
+            )
+        else:
+            prefill_fn = jax.jit(
+                st.make_prefill_step(cfg, 1, max_len, mesh, sharder)
+            )
         stack_fn = jax.jit(
             lambda slots: jax.tree.map(
                 lambda *xs: jnp.concatenate(xs, axis=xs[0].ndim - 4), *slots
@@ -607,9 +744,16 @@ def _serve_unpaged(
     else:
         # ring/recurrent decode state: batched lock-step prefill (per-slot
         # positions cannot address a shared ring)
-        prefill_fn = jax.jit(
-            st.make_prefill_step(cfg, batch, max_len, mesh, sharder)
-        )
+        if wplan is not None:
+            prefill_fn = st.make_weight_streamed_prefill_step(
+                cfg, wplan, batch, max_len, mesh, sharder, engine=engine,
+                stats=param_stats, param_shardings=p_sh, prefetch=param_pf,
+                residency=residency,
+            )
+        else:
+            prefill_fn = jax.jit(
+                st.make_prefill_step(cfg, batch, max_len, mesh, sharder)
+            )
         logits, caches = prefill_fn(params, _prompt_batch(cfg, prompts))
         tokens = np.asarray(argmax_fn(logits))
     jax.block_until_ready(caches)
@@ -625,12 +769,12 @@ def _serve_unpaged(
         t0 = time.perf_counter()
         c = mk.place(c, mesh, specs, kind)
         jax.block_until_ready(c)
-        if engine is not None:
-            engine.emulate_blocking_transfer(cache_leaves, cache_bytes)
+        if kv_engine is not None:
+            kv_engine.emulate_blocking_transfer(cache_leaves, cache_bytes)
         c = mk.place(c, mesh, specs, mk.DEVICE)
         jax.block_until_ready(c)
-        if engine is not None:
-            engine.emulate_blocking_transfer(cache_leaves, cache_bytes)
+        if kv_engine is not None:
+            kv_engine.emulate_blocking_transfer(cache_leaves, cache_bytes)
         w = time.perf_counter() - t0
         stats.n_transfers += 2
         stats.n_groups += 1
@@ -661,20 +805,32 @@ def _serve_unpaged(
         )
 
     step_waits = []
+    # decode-loop-only expert traffic (warmup's routed fetches excluded) —
+    # what the bench's routed-vs-all-expert gate divides by gen-1 steps
+    eb0 = expert_stats.bytes_h2d if expert_stats is not None else 0
+    ef0 = expert_stats.unique_group_fetches if expert_stats is not None else 0
     t0 = time.perf_counter()
-    for i in range(gen - 1):
-        w0 = stats.transfer_wait_s
-        if not device_resident:
-            # the paper's Host kind, pre-pager: the ENTIRE cache
-            # round-trips through host memory synchronously every step
-            caches = round_trip(caches)
-        logits, caches = decode_fn(
-            params, caches, _step_batch(cfg, tokens), step_pos(i)
-        )
-        tokens = np.asarray(argmax_fn(logits))
-        out_tokens.append(emitted_of(tokens))
-        step_waits.append(stats.transfer_wait_s - w0)
-    t_decode = time.perf_counter() - t0
+    try:
+        for i in range(gen - 1):
+            w0 = stats.transfer_wait_s
+            if not device_resident:
+                # the paper's Host kind, pre-pager: the ENTIRE cache
+                # round-trips through host memory synchronously every step
+                caches = round_trip(caches)
+            logits, caches = decode_fn(
+                params, caches, _step_batch(cfg, tokens), step_pos(i)
+            )
+            tokens = np.asarray(argmax_fn(logits))
+            out_tokens.append(emitted_of(tokens))
+            step_waits.append(stats.transfer_wait_s - w0)
+        t_decode = time.perf_counter() - t0
+    finally:
+        if own_engine is not None:
+            own_engine.close()
+        if param_store is not None:
+            param_store.close()
+        if residency is not None:
+            residency.clear()
 
     generated = np.stack(out_tokens, axis=1)
     return {
@@ -686,6 +842,18 @@ def _serve_unpaged(
         "step_waits": step_waits,
         "stats": stats,
         "paged": False,
+        "n_steps": gen - 1,
+        "param_stats": param_stats,
+        "expert_stats": expert_stats,
+        "param_plan": wplan,
+        "expert_decode_bytes": (
+            expert_stats.bytes_h2d - eb0 if expert_stats is not None else 0
+        ),
+        "expert_decode_fetches": (
+            expert_stats.unique_group_fetches - ef0
+            if expert_stats is not None
+            else 0
+        ),
     }
 
 
@@ -715,6 +883,8 @@ def serve(
     param_layers_per_group: Optional[int] = None,
     param_distance=AUTO,
     param_cache_mb: Optional[float] = None,
+    expert_stream: bool = False,
+    route_experts: bool = True,
 ):
     """Serve ``n_requests`` greedy-decode requests (default: one per batch
     slot) of ``prompt_len`` prompt tokens and ``gen`` generated tokens.
@@ -723,17 +893,17 @@ def serve(
     :class:`ServeSession`; ``kv_page_len=0`` runs the unpaged reference
     schedule (synchronous whole-cache placement per step for host kinds).
     ``param_kind`` homes the *weights* off-device and streams them
-    layer-group-wise per prefill/decode step (paged sessions only).
+    group-wise per prefill/decode step (paged and unpaged sessions).
+    ``expert_stream`` splits MoE experts into their own fetch groups and
+    decodes router-first, fetching only the routed experts per step
+    (``route_experts=False`` keeps the split program but fetches all E —
+    the bench's all-expert baseline).
     Returns timing, per-request generated tokens (``(n_requests, gen)``),
     the :class:`StreamStats` row, and pager residency accounting.
     """
     stats = StreamStats()
     n_requests = n_requests or batch
     if kv_page_len <= 0:
-        if param_kind != "device":
-            raise ValueError(
-                "streamed params require the paged session (kv_page_len > 0)"
-            )
         if n_requests != batch:
             raise ValueError("the unpaged path serves exactly one request per slot")
         return _serve_unpaged(
@@ -747,6 +917,14 @@ def serve(
             engine=engine,
             warmup=warmup,
             stats=stats,
+            param_kind=param_kind,
+            device_budget_mb=device_budget_mb,
+            param_layers_per_group=param_layers_per_group,
+            param_distance=param_distance,
+            param_cache_mb=param_cache_mb,
+            expert_stream=expert_stream,
+            route_experts=route_experts,
+            spill_dir=spill_dir,
         )
 
     key_t = jax.random.PRNGKey(seed + 1)
@@ -772,6 +950,8 @@ def serve(
         param_layers_per_group=param_layers_per_group,
         param_distance=param_distance,
         param_cache_mb=param_cache_mb,
+        expert_stream=expert_stream,
+        route_experts=route_experts,
     ) as session:
         rids = [session.submit(prompts[i], gen) for i in range(n_requests)]
         if warmup:
@@ -805,6 +985,7 @@ def serve(
             "peak_resident_bytes": session.pager.peak_resident_bytes,
             "total_cache_bytes": session.pager.total_cache_bytes(),
             "param_stats": session.param_stats,
+            "expert_stats": session.expert_stats,
             "param_plan": session._wplan,
             "param_step_fetches": list(session.param_step_fetches),
             "param_residency": (
@@ -846,6 +1027,10 @@ def main() -> int:
                     help="weight-residency cache capacity (default: the "
                     "budget slack above the prefetch window; unbounded "
                     "without a budget; 0 disables)")
+    ap.add_argument("--expert-stream", action="store_true",
+                    help="split MoE experts into per-expert fetch groups "
+                    "and fetch only the routed top-k per decode step "
+                    "(requires a streamed --param-kind and an MoE arch)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -869,6 +1054,7 @@ def main() -> int:
         param_kind=args.param_kind,
         device_budget_mb=args.device_budget_mb,
         param_cache_mb=args.param_cache_mb,
+        expert_stream=args.expert_stream,
     )
     stats = res["stats"]
     print(
@@ -903,6 +1089,13 @@ def main() -> int:
             f"{ps.peak_inflight_bytes} B of {plan.total_param_bytes} B "
             f"total params"
         )
+        if res.get("expert_stats") is not None:
+            es = res["expert_stats"]
+            print(
+                f"experts: {es.unique_group_fetches} fetched groups / "
+                f"{es.cache_hits} resident hits, {es.bytes_h2d} B H2D "
+                f"over {res['n_steps']} steps"
+            )
         if res.get("param_residency") is not None:
             rc = res["param_residency"]
             print(

@@ -49,6 +49,7 @@ def build_trainer(
     param_kind: str = "device",
     device_budget_mb=None,
     param_layers_per_group=None,
+    expert_stream: bool = False,
     transfer_retries: int = 1,
 ):
     """Assemble (driver, jitted step) for a config on a mesh.
@@ -148,13 +149,25 @@ def build_trainer(
         return {"params": params, "opt": opt}, metrics
 
     log = logging.getLogger("repro.train")
+    if expert_stream and param_kind == "device":
+        raise ValueError(
+            "--expert-stream streams routed experts from a weight home; "
+            "it requires --param-kind pinned_host or disk_host"
+        )
     if param_kind != "device":
-        from repro.core.weightstream import PARAM_KINDS, WeightStreamPlan
+        from repro.core.weightstream import (
+            PARAM_KINDS,
+            WeightStreamPlan,
+            weight_stream_support,
+        )
 
         if param_kind not in PARAM_KINDS:
             raise ValueError(
                 f"unknown --param-kind {param_kind!r}; expected one of {PARAM_KINDS}"
             )
+        support = weight_stream_support(cfg)
+        if not support:
+            raise ValueError(f"--param-kind {param_kind}: {support.reason}")
         if stream_opt:
             log.warning(
                 "--stream-opt is subsumed by --param-kind %s: the AdamW "
@@ -167,10 +180,12 @@ def build_trainer(
             st.abstract_params(cfg),
             layers_per_group=param_layers_per_group,
             device_budget_mb=device_budget_mb,
+            expert_stream=expert_stream,
         )
         log.info(
-            "weight streaming: %d groups (%d layers/group), total %.1f MB, "
-            "peak(d=1) %.1f MB, max distance %d",
+            "weight streaming: %s program, %d groups (%d layers/group), "
+            "total %.1f MB, peak(d=1) %.1f MB, max distance %d",
+            plan.layout,
             plan.n_groups,
             plan.layers_per_group,
             plan.total_param_bytes / 1e6,
@@ -468,6 +483,13 @@ def main() -> int:
         "fitting --device-budget-mb, else n_layers/4)",
     )
     ap.add_argument(
+        "--expert-stream",
+        action="store_true",
+        help="split MoE experts into per-expert fetch groups (train "
+        "overlaps all-expert fetch with compute; requires a streamed "
+        "--param-kind and an MoE arch)",
+    )
+    ap.add_argument(
         "--fail-at",
         default=None,
         help="comma-separated step numbers at which to inject one failure "
@@ -534,6 +556,7 @@ def main() -> int:
         param_kind=args.param_kind,
         device_budget_mb=args.device_budget_mb,
         param_layers_per_group=args.param_layers_per_group,
+        expert_stream=args.expert_stream,
         transfer_retries=args.transfer_retries,
     )
     t0 = time.time()

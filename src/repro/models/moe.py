@@ -77,6 +77,51 @@ def _expert_ffn(cfg: ModelConfig, p: Params, x: jax.Array, eqn_in: str, eqn_out:
 
 
 # ---------------------------------------------------------------------------
+# router-first decode (route-aware expert streaming)
+# ---------------------------------------------------------------------------
+
+def decode_route(cfg: ModelConfig, p: Params, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Routing only: (top_w, top_i) for the decode token(s).  Needs just
+    ``p["router"]`` — the weight-stream decode path runs this *before* any
+    expert weights are on device, so the engine can fetch only the routed
+    experts' groups (aux losses are decode-irrelevant and dropped)."""
+    top_w, top_i, _, _ = _router(cfg, {"router": p["router"]}, x)
+    return top_w, top_i
+
+
+def decode_apply(
+    cfg: ModelConfig, stack: Params, top_w: jax.Array, top_i: jax.Array, x: jax.Array
+) -> jax.Array:
+    """Dense per-token expert FFN from precomputed routing.  ``stack``
+    holds expert-stacked leaves ``{wi: (E', D, F), wo: (E', F, D), wg?}``
+    where ``E'`` may be the full expert count or a fetched subset —
+    ``top_i`` indexes ``stack``'s leading axis.  Gather-then-cast keeps the
+    gathered rows bitwise-identical whether they come from the full stack
+    or a routed subset, which is what makes route-aware streaming
+    bitwise-equal to all-expert decode."""
+    wi = jnp.take(stack["wi"], top_i, axis=0).astype(x.dtype)  # (..., K, D, F)
+    h = jnp.einsum("...d,...kdf->...kf", x, wi)
+    h = layers._act(h, cfg.mlp_type)
+    if "wg" in stack:
+        wg = jnp.take(stack["wg"], top_i, axis=0).astype(x.dtype)
+        h = h * jnp.einsum("...d,...kdf->...kf", x, wg)
+    wo = jnp.take(stack["wo"], top_i, axis=0).astype(x.dtype)  # (..., K, F, D)
+    y = jnp.einsum("...kf,...kfd->...kd", h, wo)
+    return jnp.sum(y * top_w.astype(x.dtype)[..., None], axis=-2)
+
+
+def moe_decode(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """One decode step's MoE FFN: router-first routing + dense top-k gather
+    (no capacity buffer, no token drops — every routed pair computes).
+    The monolithic decode path and the streamed route-aware path both run
+    this math, so splitting experts into their own fetch groups never
+    changes what is computed."""
+    top_w, top_i = decode_route(cfg, p, x)
+    stack = {n: p[n] for n in ("wi", "wo", "wg") if n in p}
+    return decode_apply(cfg, stack, top_w, top_i, x)
+
+
+# ---------------------------------------------------------------------------
 # strategy 1: GShard dispatch einsum (baseline)
 # ---------------------------------------------------------------------------
 

@@ -127,16 +127,53 @@ def init_model_shell(key: jax.Array, cfg: ModelConfig) -> Params:
 
 
 def init_model_slice(key: jax.Array, cfg: ModelConfig, lo: int, hi: int) -> Params:
-    """The stacked-blocks slice ``[lo:hi)`` of :func:`init_model`'s
-    ``params["blocks"]``, bitwise-identical (each layer drawn from the same
-    per-layer key), materializing only those layers.  Uniform scanned
-    stacks only — the shape weight streaming supports."""
-    if not (cfg.uniform_blocks and cfg.use_scan):
-        raise ValueError("init_model_slice requires uniform scanned blocks")
+    """The ``blocks`` slice ``[lo:hi)`` of :func:`init_model`,
+    bitwise-identical (each layer drawn from the same per-layer key),
+    materializing only those layers.  Uniform scanned stacks return the
+    stacked slice; unrolled layouts (and the period layout's unrolled
+    tail) return the named-block dict slice."""
     _, kl, _, _ = jax.random.split(key, 4)
     lkeys = jax.random.split(kl, cfg.n_layers)
-    blocks = [_init_block(lkeys[i], cfg, "attn") for i in range(lo, hi)]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    if cfg.uniform_blocks and cfg.use_scan:
+        blocks = [_init_block(lkeys[i], cfg, "attn") for i in range(lo, hi)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    if cfg.period_scan:
+        tail0 = (cfg.n_layers // cfg.scan_period) * cfg.scan_period
+        if lo < tail0:
+            raise ValueError(
+                "period-scanned ranges init via init_model_period_slice"
+            )
+        return {
+            f"tail_{i - tail0}": _init_block(lkeys[i], cfg, cfg.block_kind(i))
+            for i in range(lo, hi)
+        }
+    return {
+        f"layer_{i:03d}": _init_block(lkeys[i], cfg, cfg.block_kind(i))
+        for i in range(lo, hi)
+    }
+
+
+def init_model_period_slice(
+    key: jax.Array, cfg: ModelConfig, ulo: int, uhi: int
+) -> Params:
+    """The period-unit slice ``[ulo:uhi)`` of a period-scanned model's
+    ``params["blocks"]["periods"]``, bitwise-identical to
+    :func:`init_model`'s stacking (same per-layer keys), materializing only
+    those periods — the period layout's analogue of
+    :func:`init_model_slice`."""
+    if not cfg.period_scan:
+        raise ValueError("init_model_period_slice requires a period-scanned arch")
+    _, kl, _, _ = jax.random.split(key, 4)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    p = cfg.scan_period
+    periods: Params = {}
+    for k in range(p):
+        pos = [
+            _init_block(lkeys[j * p + k], cfg, cfg.block_kind(k))
+            for j in range(ulo, uhi)
+        ]
+        periods[f"pos_{k}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *pos)
+    return periods
 
 
 def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, cl: int, dtype) -> Params:
@@ -255,7 +292,9 @@ def _block_decode(cfg: ModelConfig, kind: str, p: Params, x, angles, cache, pos)
     if kind in ("attn", "rec") and ("mlp" in p or "moe" in p):
         h = layers.norm_apply(p["ln2"], x, cfg.norm_type)
         if "moe" in p:
-            h, _ = moe.moe_dispatch(cfg, p["moe"], h)
+            # router-first dense top-k (no capacity buffer): the same math
+            # the route-aware streamed decode runs on its fetched subset
+            h = moe.moe_decode(cfg, p["moe"], h)
         else:
             h = layers.mlp_apply(p["mlp"], h, cfg.mlp_type)
         x = x + h
@@ -679,6 +718,76 @@ def block_group_decode(
         return x, nc
 
     return jax.lax.scan(body, x, (blocks_slice, cache_slice))
+
+
+def hetero_group_train(
+    cfg: ModelConfig, kinds, group: Params, x, aux, angles, sharder=None
+):
+    """Forward over one named-block group (unrolled layout / period-scan
+    tails): ``kinds`` is the ``(name, block_kind)`` sequence in layer
+    order; ``group`` maps each name to its block params.  The exact
+    unrolled body of :func:`forward_hidden`, entered mid-stack.  Returns
+    ``(x, aux)``."""
+    for name, kind in kinds:
+        p = group[name]
+        if sharder is not None:
+            p = sharder.block(p, (name,))
+        fn = _remat(cfg, functools.partial(_hetero_block_train, cfg, kind))
+        x, _, a = fn(p, x, angles)
+        aux = aux + a
+        if sharder is not None:
+            x = sharder.acts(x)
+    return x, aux
+
+
+def period_group_train(
+    cfg: ModelConfig, periods_slice: Params, x, aux, angles, sharder=None
+):
+    """Forward over a slice of stacked period-units — the same period scan
+    body as :func:`forward_hidden`, entered mid-stack (hetero blocks carry
+    no MoE, so ``aux`` rides through unchanged, matching the monolithic
+    path's discard).  Returns ``(x, aux)``."""
+    period = cfg.scan_period
+
+    def period_body(x, pos_params):
+        for k in range(period):
+            pk = pos_params[f"pos_{k}"]
+            if sharder is not None:
+                pk = sharder.block(pk, ("periods", f"pos_{k}"))
+            fn = _remat(
+                cfg, functools.partial(_hetero_block_train, cfg, cfg.block_kind(k))
+            )
+            x, _, _ = fn(pk, x, angles)
+            if sharder is not None:
+                x = sharder.acts(x)
+        return x, None
+
+    x, _ = jax.lax.scan(period_body, x, periods_slice)
+    return x, aux
+
+
+def block_decode_pre_moe(
+    cfg: ModelConfig, blocks_slice: Params, cache_slice: Params, x, angles, pos,
+    sharder=None,
+):
+    """First half of ONE MoE layer's decode step, stopping right before the
+    routed FFN: attention + residual + pre-MoE norm + router.  ``blocks_slice``
+    is the layer's stacked non-expert group (leading axis 1: norms,
+    attention, ``moe.router`` — no expert tensors).  Returns
+    ``(x_attn, h2, top_w, top_i, new_cache_slice)``: the caller fetches the
+    routed experts' groups and finishes with :func:`repro.models.moe.decode_apply`
+    (``x = x_attn + y``)."""
+    p = jax.tree.map(lambda a: a[0], blocks_slice)
+    cache = jax.tree.map(lambda a: a[0], cache_slice)
+    if sharder is not None:
+        p = sharder.block(p)
+    h = layers.norm_apply(p["ln1"], x, cfg.norm_type)
+    h, new_cache = attention.attention_decode(cfg, p["attn"], h, angles, cache, pos)
+    x = x + h
+    h2 = layers.norm_apply(p["ln2"], x, cfg.norm_type)
+    top_w, top_i = moe.decode_route(cfg, p["moe"], h2)
+    new_cache = jax.tree.map(lambda a: a[None], new_cache)
+    return x, h2, top_w, top_i, new_cache
 
 
 def head_stage_logits(cfg: ModelConfig, group: Params, x) -> jax.Array:

@@ -440,6 +440,14 @@ def _resharded_bwd(fwd_sharding, bwd_sharding, _, g):
 _resharded.defvjp(_resharded_fwd, _resharded_bwd)
 
 
+def _prune_to(tree, specs):
+    """Restrict a spec dict-tree to the keys present in ``tree`` (identity
+    when the structures already match)."""
+    if isinstance(tree, dict) and isinstance(specs, dict):
+        return {k: _prune_to(v, specs[k]) for k, v in tree.items()}
+    return specs
+
+
 @dataclasses.dataclass
 class Sharder:
     """Explicit sharding control threaded through the model.
@@ -485,12 +493,17 @@ class Sharder:
 
     def block(self, p, name=None):
         """``name``: None (uniform stacked layer slice), a key string, or a
-        tuple path into the blocks subtree (period scan: ('periods','pos_k'))."""
+        tuple path into the blocks subtree (period scan: ('periods','pos_k')).
+        ``p`` may be a key-subset of the block structure (the expert-stream
+        decode path shards a block's NON-expert group alone); specs are
+        pruned to the keys present."""
         specs, bwd = self.block_specs, self.fsdp_specs
         if name is not None:
             for part in (name,) if isinstance(name, str) else name:
                 specs = specs[part]
                 bwd = bwd[part] if bwd is not None else None
+        specs = _prune_to(p, specs)
+        bwd = _prune_to(p, bwd) if bwd is not None else None
         if bwd is None:
             return jax.tree.map(
                 lambda a, s: jax.lax.with_sharding_constraint(a, self._ns(s)), p, specs

@@ -40,7 +40,10 @@ Pytree = Any
 #: checkpoint leaf-name separator (matches repro.checkpoint.manager._SEP)
 _SEP = "__"
 
-_GROUP_KEY_RE = re.compile(r"g(\d{3,})_(embed|head|layers_(\d{3,})_(\d{3,}))")
+_GROUP_KEY_RE = re.compile(
+    r"g(\d{3,})_(embed|head|"
+    r"(layers|expert|period|block)_(\d{3,})_(\d{3,})(?:_e(\d{2,}))?)"
+)
 
 
 def elastic_mesh_shape(
@@ -169,20 +172,27 @@ def check_restart_mesh(expected: dict) -> None:
 
 def parse_group_key(key: str) -> Optional[dict]:
     """Parse a weight-stream group key (``g000_embed`` /
-    ``g001_layers_000_002`` / ``g004_head``) into its kind + layer bounds;
+    ``g001_layers_000_002`` / ``g003_period_000_004`` /
+    ``g002_block_002_003`` / ``g002_expert_001_002_e03`` / ``g004_head``)
+    into its kind + layer bounds (+ expert index, -1 for non-expert kinds);
     None for names that are not group keys."""
     m = _GROUP_KEY_RE.fullmatch(key)
     if m is None:
         return None
     if m.group(2) == "embed":
-        return {"key": key, "kind": "embed", "lo": 0, "hi": 0}
+        return {"key": key, "kind": "embed", "lo": 0, "hi": 0, "expert": -1}
     if m.group(2) == "head":
-        return {"key": key, "kind": "head", "lo": 0, "hi": 0}
+        return {"key": key, "kind": "head", "lo": 0, "hi": 0, "expert": -1}
+    kind = m.group(3)
+    expert = m.group(6)
+    if (kind == "expert") != (expert is not None):
+        return None  # the _eNN suffix is exactly the expert kinds' marker
     return {
         "key": key,
-        "kind": "layers",
-        "lo": int(m.group(3)),
-        "hi": int(m.group(4)),
+        "kind": kind,
+        "lo": int(m.group(4)),
+        "hi": int(m.group(5)),
+        "expert": int(expert) if expert is not None else -1,
     }
 
 
@@ -241,17 +251,56 @@ def reshard_grouped_checkpoint(
     if set(old_groups) == new_keys:
         return False  # same partition — nothing to re-shard
 
-    old_layers = sorted(
-        (g for g in old_groups.values() if g["kind"] == "layers"),
+    mid_kinds_old = frozenset(
+        g["kind"] for g in old_groups.values() if g["kind"] not in ("embed", "head")
+    )
+    mid_kinds_new = frozenset(
+        g.kind for g in plan.groups if g.kind not in ("embed", "head")
+    )
+    if mid_kinds_old != mid_kinds_new:
+        raise ValueError(
+            f"checkpoint step {step} was written with a "
+            f"{sorted(mid_kinds_old)} group program but the plan builds "
+            f"{sorted(mid_kinds_new)} — kind-family changes "
+            "(e.g. toggling --expert-stream) cannot be streamed between "
+            "partitions; resume with the original flags, or export the "
+            "params and re-import under the new program"
+        )
+    if "expert" in mid_kinds_old:
+        # expert programs force layers_per_group=1, so their keys are a
+        # function of the config alone — differing key sets mean the model
+        # (n_experts / n_layers) changed, which no reshard can bridge
+        raise ValueError(
+            f"checkpoint step {step} and the plan both use expert-split "
+            "groups but their group keys differ — the MoE shape changed; "
+            "re-grouping cannot change the model"
+        )
+    #: stacked middle kinds reslice along axis 0 ("period" in period-unit
+    #: coordinates); named "block" groups redistribute whole block subtrees
+    stacked_kind = (
+        "layers" if "layers" in mid_kinds_old
+        else ("period" if "period" in mid_kinds_old else None)
+    )
+    old_stacked = sorted(
+        (g for g in old_groups.values() if g["kind"] == stacked_kind),
         key=lambda g: g["lo"],
     )
+    scale = plan.scan_period if stacked_kind == "period" else 1
+    old_blocks = {k: g for k, g in old_groups.items() if g["kind"] == "block"}
     old_embed = next(
         (k for k, g in old_groups.items() if g["kind"] == "embed"), None
     )
     old_head = next(
         (k for k, g in old_groups.items() if g["kind"] == "head"), None
     )
-    span = old_layers[-1]["hi"] if old_layers else 0
+    span = max(
+        (
+            g["hi"]
+            for g in old_groups.values()
+            if g["kind"] not in ("embed", "head")
+        ),
+        default=0,
+    )
     if span != plan.n_layers:
         raise ValueError(
             f"checkpoint step {step} covers {span} layers but the plan has "
@@ -274,24 +323,52 @@ def reshard_grouped_checkpoint(
                         _SEP.join((top, "groups", new_key, sub)),
                         _load(_SEP.join((top, "groups", old_key, sub))),
                     )
-            layer_subs = subs.get((top, old_layers[0]["key"]), [])
-            for ng in plan.groups:
-                if ng.kind != "layers":
-                    continue
-                for sub in layer_subs:
-                    parts = []
-                    for og in old_layers:
-                        lo, hi = max(ng.lo, og["lo"]), min(ng.hi, og["hi"])
-                        if lo >= hi:
+            if old_stacked:
+                layer_subs = subs.get((top, old_stacked[0]["key"]), [])
+                for ng in plan.groups:
+                    if ng.kind != stacked_kind:
+                        continue
+                    for sub in layer_subs:
+                        parts = []
+                        for og in old_stacked:
+                            lo, hi = max(ng.lo, og["lo"]), min(ng.hi, og["hi"])
+                            if lo >= hi:
+                                continue
+                            arr = _load(
+                                _SEP.join((top, "groups", og["key"], sub))
+                            )
+                            parts.append(
+                                arr[
+                                    (lo - og["lo"]) // scale
+                                    : (hi - og["lo"]) // scale
+                                ]
+                            )
+                        out = (
+                            np.ascontiguousarray(parts[0])
+                            if len(parts) == 1
+                            else np.concatenate(
+                                [np.asarray(p) for p in parts], axis=0
+                            )
+                        )
+                        yield _SEP.join((top, "groups", ng.key, sub)), out
+            if old_blocks:
+                # each sub is "<block_name>__<rest>": whole named blocks
+                # move to whichever new group homes that block name
+                sub_home = {}
+                for old_key in old_blocks:
+                    for sub in subs.get((top, old_key), []):
+                        sub_home[sub] = old_key
+                for ng in plan.groups:
+                    if ng.kind != "block":
+                        continue
+                    names = set(plan.block_names(ng))
+                    for sub, old_key in sub_home.items():
+                        if sub.split(_SEP)[0] not in names:
                             continue
-                        arr = _load(_SEP.join((top, "groups", og["key"], sub)))
-                        parts.append(arr[lo - og["lo"] : hi - og["lo"]])
-                    out = (
-                        np.ascontiguousarray(parts[0])
-                        if len(parts) == 1
-                        else np.concatenate([np.asarray(p) for p in parts], axis=0)
-                    )
-                    yield _SEP.join((top, "groups", ng.key, sub)), out
+                        yield (
+                            _SEP.join((top, "groups", ng.key, sub)),
+                            _load(_SEP.join((top, "groups", old_key, sub))),
+                        )
         for name in passthrough:
             yield name, _load(name)
 

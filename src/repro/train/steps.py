@@ -26,8 +26,8 @@ from repro.core.engine import EngineConfig, TransferEngine
 from repro.core.hoststream import HostStreamExecutor, StreamStats
 from repro.core.refspec import PrefetchSpec
 from repro.core.residency import ResidencyCache
-from repro.core.weightstream import WeightStreamPlan
-from repro.models import transformer
+from repro.core.weightstream import WeightStreamPlan, merge_expert_slice
+from repro.models import moe, transformer
 from repro.optim.adamw import (
     AdamWConfig,
     adamw_globals,
@@ -369,9 +369,23 @@ def _opt_state_leaf(p):
 def _init_group_f32(key: jax.Array, cfg: ModelConfig, plan: WeightStreamPlan, g, shell_box: dict):
     """One home group's f32 init leaves — exactly :func:`transformer.init_model`'s
     values for those leaves, computed without materializing any other layer
-    (the group-wise init: at most one group is device-resident at a time)."""
-    if g.kind == "layers":
-        return transformer.init_model_slice(key, cfg, g.lo, g.hi)
+    (the group-wise init: at most one layer slice is device-resident at a
+    time — ``shell_box`` carries a one-entry slice cache so an expert-split
+    layer's E + 1 groups share one init of its slice)."""
+    if g.kind in ("layers", "block", "expert"):
+        ck = ("slice", g.lo, g.hi)
+        if shell_box.get("slice_key") != ck:
+            shell_box["slice_key"] = ck
+            shell_box["slice"] = transformer.init_model_slice(key, cfg, g.lo, g.hi)
+        sl = shell_box["slice"]
+        if g.kind == "expert":
+            return {n: sl["moe"][n][:, g.expert] for n in plan.expert_names}
+        if g.kind == "layers" and plan.expert_stream:
+            return plan._strip_experts(sl)
+        return sl
+    if g.kind == "period":
+        p = cfg.scan_period
+        return transformer.init_model_period_slice(key, cfg, g.lo // p, g.hi // p)
     if "shell" not in shell_box:
         shell_box["shell"] = transformer.init_model_shell(key, cfg)
     keys = plan.embed_keys if g.kind == "embed" else plan.head_home_keys
@@ -562,8 +576,28 @@ def make_weight_streamed_train_step(
         )
     stats = stats if stats is not None else StreamStats()
     opt_stats = opt_stats if opt_stats is not None else StreamStats()
-    nlg = len(plan.layer_groups)
     f32 = jnp.float32
+
+    # -- group program maps: the step walks plan.units, one jitted stage per
+    # unit (a "moe" unit's groups are buffered until its last group lands)
+    units = plan.units
+    head_idx = plan.n_groups - 1
+    #: group index -> (unit position, True when this group completes its
+    #: unit in FORWARD fetch order)
+    unit_pos: dict = {}
+    for u_i, u in enumerate(units):
+        for j, gi in enumerate(u.gidx):
+            unit_pos[gi] = (u_i, j == len(u.gidx) - 1)
+    #: backward program: strict reverse of the middle groups, then embed
+    bwd_order = [plan.groups[i] for i in range(head_idx - 1, 0, -1)] + [
+        plan.groups[0]
+    ]
+    #: backward position -> (unit position, True when this group completes
+    #: its unit in REVERSE order — i.e. the unit's forward-first group)
+    bwd_map: dict = {}
+    for pos, g in enumerate(bwd_order[:-1]):
+        u_i, _ = unit_pos[g.index]
+        bwd_map[pos] = (u_i, g.index == units[u_i].gidx[0])
 
     #: the forward→backward turnaround pin set: backward consumes groups in
     #: reverse fetch order, so the LAST groups forward fetched are the FIRST
@@ -573,7 +607,7 @@ def make_weight_streamed_train_step(
     if cache is not None:
         picked: list = []
         total = 0
-        for g in [plan.groups[i] for i in range(nlg, 0, -1)] + [plan.groups[0]]:
+        for g in bwd_order:
             nb = plan.group_bytes(g, fetch=False)
             if cache.capacity_bytes is not None and total + nb > cache.capacity_bytes:
                 break
@@ -624,6 +658,83 @@ def make_weight_streamed_train_step(
         dp, dx = vjp((ct_x, jnp.ones((), f32)))
         return dp, dx, _leaf_sqsums(dp)
 
+    # -- per-unit-kind stages beyond the uniform "layers" pair: the moe unit
+    # re-merges its expert groups device-side (bitwise-identical to the
+    # unsplit slice), period/block units run the hetero scan/unrolled bodies
+    @jax.jit
+    def moe_fwd(ne, experts, x, aux, angles):
+        merged = merge_expert_slice(ne, experts)
+        return transformer.block_group_train(cfg, merged, x, aux, angles, mesh, sharder)
+
+    @jax.jit
+    def moe_bwd(ne, experts, x_in, angles, ct_x):
+        def f(ne_, ex_, x):
+            merged = merge_expert_slice(ne_, ex_)
+            return transformer.block_group_train(
+                cfg, merged, x, jnp.zeros((), f32), angles, mesh, sharder
+            )
+
+        _, vjp = jax.vjp(f, ne, experts, x_in)
+        dp_ne, dp_ex, dx = vjp((ct_x, jnp.ones((), f32)))
+        return dp_ne, dp_ex, dx, _leaf_sqsums((dp_ne, dp_ex))
+
+    @jax.jit
+    def period_fwd(group, x, aux, angles):
+        return transformer.period_group_train(cfg, group, x, aux, angles, sharder)
+
+    @jax.jit
+    def period_bwd(group, x_in, angles, ct_x):
+        def f(p, x):
+            return transformer.period_group_train(
+                cfg, p, x, jnp.zeros((), f32), angles, sharder
+            )
+
+        _, vjp = jax.vjp(f, group, x_in)
+        dp, dx = vjp((ct_x, jnp.ones((), f32)))
+        return dp, dx, _leaf_sqsums(dp)
+
+    def _make_block_fns(g):
+        kinds = tuple(
+            (name, cfg.block_kind(l))
+            for name, l in zip(plan.block_names(g), range(g.lo, g.hi))
+        )
+
+        @jax.jit
+        def fwd(group, x, aux, angles):
+            return transformer.hetero_group_train(
+                cfg, kinds, group, x, aux, angles, sharder
+            )
+
+        @jax.jit
+        def bwd(group, x_in, angles, ct_x):
+            def f(p, x):
+                return transformer.hetero_group_train(
+                    cfg, kinds, p, x, jnp.zeros((), f32), angles, sharder
+                )
+
+            _, vjp = jax.vjp(f, group, x_in)
+            dp, dx = vjp((ct_x, jnp.ones((), f32)))
+            return dp, dx, _leaf_sqsums(dp)
+
+        return fwd, bwd
+
+    unit_fwd: list = []
+    unit_bwd: list = []
+    for u in units:
+        if u.kind == "layers":
+            unit_fwd.append(group_fwd)
+            unit_bwd.append(group_bwd)
+        elif u.kind == "moe":
+            unit_fwd.append(moe_fwd)
+            unit_bwd.append(moe_bwd)
+        elif u.kind == "period":
+            unit_fwd.append(period_fwd)
+            unit_bwd.append(period_bwd)
+        else:  # "block": kinds are static per group, so one jit per unit
+            fwd, bwd = _make_block_fns(plan.groups[u.gidx[0]])
+            unit_fwd.append(fwd)
+            unit_bwd.append(bwd)
+
     @jax.jit
     def embed_bwd(group, batch, ct_x, extra):
         def f(p):
@@ -661,36 +772,67 @@ def make_weight_streamed_train_step(
     box: dict = {}
 
     def apply_f(i, carry, group):
-        _store(plan.groups[i], group, pinned=plan.groups[i].key in pin_keys)
+        g = plan.groups[i]
+        _store(g, group, pinned=g.key in pin_keys)
         if i == 0:
             box["x"], box["angles"] = embed_fwd(group, box["batch"])
             box["aux"] = jnp.zeros((), f32)
             box["acts"] = []
+            box["parts"] = []
             return box["x"]
-        if i <= nlg:
-            box["acts"].append(box["x"])
-            box["x"], box["aux"] = group_fwd(group, box["x"], box["aux"], box["angles"])
+        if i == head_idx:
+            loss, metrics, dp_home, dp_embed, dx, sq = head_grad(
+                group, box["x"], box["aux"], box["batch"]
+            )
+            box.update(
+                loss=loss, metrics=metrics, dp_head_home=dp_home,
+                dp_head_embed=dp_embed, ct=dx, sq=[sq],
+            )
+            return loss
+        u_i, last = unit_pos[i]
+        box["parts"].append(group)
+        if not last:  # moe unit: buffer until every group of the unit landed
             return box["x"]
-        loss, metrics, dp_home, dp_embed, dx, sq = head_grad(
-            group, box["x"], box["aux"], box["batch"]
-        )
-        box.update(
-            loss=loss, metrics=metrics, dp_head_home=dp_home,
-            dp_head_embed=dp_embed, ct=dx, sq=[sq],
-        )
-        return loss
+        parts, box["parts"] = box["parts"], []
+        box["acts"].append(box["x"])  # unit-boundary activation checkpoint
+        if units[u_i].kind == "moe":
+            box["x"], box["aux"] = unit_fwd[u_i](
+                parts[0], tuple(parts[1:]), box["x"], box["aux"], box["angles"]
+            )
+        else:
+            box["x"], box["aux"] = unit_fwd[u_i](
+                parts[0], box["x"], box["aux"], box["angles"]
+            )
+        return box["x"]
 
     def apply_b(i, carry, group):
-        _store(plan.groups[nlg - i] if i < nlg else plan.groups[0], group)
-        if i < nlg:
-            x_in = box["acts"][nlg - 1 - i]  # reverse fetch order
-            dp, dx, sq = group_bwd(group, x_in, box["angles"], box["ct"])
+        g = bwd_order[i]
+        _store(g, group)
+        if i == len(bwd_order) - 1:  # embed, last in backward order
+            dp, sq = embed_bwd(group, box["batch"], box["ct"], box["dp_head_embed"])
+            box["sq"].append(sq)
+            return box["ct"], dp
+        u_i, trigger = bwd_map[i]
+        if not trigger:
+            # moe unit: experts arrive (reversed) before the non-expert
+            # trigger group; their grads drain at the trigger position, so
+            # a scalar placeholder keeps the writeback stream aligned
+            box["parts"].append(group)
+            return box["ct"], jnp.zeros((), f32)
+        x_in = box["acts"][u_i]  # reverse fetch order: unit u_i's boundary
+        if units[u_i].kind == "moe":
+            experts = tuple(reversed(box["parts"]))
+            box["parts"] = []
+            dp_ne, dp_ex, dx, sq = unit_bwd[u_i](
+                group, experts, x_in, box["angles"], box["ct"]
+            )
             box["ct"] = dx
             box["sq"].append(sq)
-            return dx, dp
-        dp, sq = embed_bwd(group, box["batch"], box["ct"], box["dp_head_embed"])
+            return dx, {"ne": dp_ne, "ex": dp_ex}
+        dp, dx, sq = unit_bwd[u_i](group, x_in, box["angles"], box["ct"])
+        box["ct"] = dx
         box["sq"].append(sq)
-        return box["ct"], dp
+        return dx, dp
 
     def apply_o(i, carry, group):
         new_p, new_s = opt_group(box["glob"], group["g"], group["s"])
@@ -717,7 +859,7 @@ def make_weight_streamed_train_step(
     sh_bwd = None
     sh_o = None
     if param_shardings is not None:
-        sh_bwd = [sh_fwd[i] for i in range(nlg, 0, -1)] + [sh_fwd[0]]
+        sh_bwd = [sh_fwd[g.index] for g in bwd_order]
         opt_sh = [
             jax.tree.map(
                 lambda s: {"master": s, "m": s, "v": s},
@@ -726,16 +868,12 @@ def make_weight_streamed_train_step(
             )
             for h in sh_home
         ]
-        order = [plan.n_groups - 1] + list(range(nlg, 0, -1)) + [0]
+        order = [head_idx] + [g.index for g in bwd_order]
         sh_o = [{"g": sh_home[j], "s": opt_sh[j]} for j in order]
 
     #: phase-O group order: head first (its grads were born on device at the
     #: head stage and pass by reference — consumed and released immediately)
-    o_order = (
-        [plan.groups[-1]]
-        + [plan.groups[i] for i in range(nlg, 0, -1)]
-        + [plan.groups[0]]
-    )
+    o_order = [plan.groups[-1]] + bwd_order
 
     def _rehome(g, p_new, s_new, idx):
         if param_kind == "disk_host":
@@ -773,17 +911,14 @@ def make_weight_streamed_train_step(
             group_shardings=sh_fwd,
         )
 
-        # phase B: reverse fetch order [Ln..L0, embed]; grads drain D2H.
-        # The pinned turnaround set makes the first fetches here cache hits.
+        # phase B: reverse fetch order [middle reversed, embed]; grads drain
+        # D2H.  The pinned turnaround set makes the first fetches cache hits.
         if cache is not None:
             bwd_groups = [
-                (lambda g=g: plan.fetch_group(home, g, cache))
-                for g in (
-                    [plan.groups[i] for i in range(nlg, 0, -1)] + [plan.groups[0]]
-                )
+                (lambda g=g: plan.fetch_group(home, g, cache)) for g in bwd_order
             ]
         else:
-            bwd_groups = [fwd_groups[i] for i in range(nlg, 0, -1)] + [fwd_groups[0]]
+            bwd_groups = [fwd_groups[g.index] for g in bwd_order]
         _, grad_outs = ex_b.run(
             box["ct"], bwd_groups, mode=mode, prefetch=pf, stats=stats,
             group_shardings=sh_bwd,
@@ -792,11 +927,23 @@ def make_weight_streamed_train_step(
         step_no = int(np.asarray(opt["step"])) + 1
         box["glob"] = globals_fn(tuple(box["sq"]), step_no)
 
-        # phase O: {grads, moments} H2D, {params, moments} one D2H drain
+        # phase O: {grads, moments} H2D, {params, moments} one D2H drain.
+        # A moe unit drained all its grads at its trigger position — split
+        # them back out so every group (experts included) updates on its own
         grads_by_key = {plan.groups[-1].key: box["dp_head_home"]}
-        for j, g in enumerate(reversed(plan.layer_groups)):
-            grads_by_key[g.key] = grad_outs[j]
         grads_by_key[plan.groups[0].key] = grad_outs[-1]
+        for pos, g in enumerate(bwd_order[:-1]):
+            u_i, trigger = bwd_map[pos]
+            if not trigger:
+                continue
+            u = units[u_i]
+            if u.kind == "moe":
+                out = grad_outs[pos]
+                grads_by_key[plan.groups[u.gidx[0]].key] = out["ne"]
+                for e_j, gi in enumerate(u.gidx[1:]):
+                    grads_by_key[plan.groups[gi].key] = out["ex"][e_j]
+            else:
+                grads_by_key[g.key] = grad_outs[pos]
         o_groups = [
             {"g": grads_by_key[g.key], "s": opt["groups"][g.key]} for g in o_order
         ]
@@ -884,7 +1031,11 @@ def make_weight_streamed_prefill_step(
     )
     mode = "on_demand" if prefetch.on_demand else "prefetch"
     pf = None if mode == "on_demand" else prefetch
-    nlg = len(plan.layer_groups)
+    head_idx = plan.n_groups - 1
+    unit_pos = {}
+    for u_i, u in enumerate(plan.units):
+        for j, gi in enumerate(u.gidx):
+            unit_pos[gi] = (u_i, j == len(u.gidx) - 1)
 
     @jax.jit
     def embed_fwd(group, batch):
@@ -898,6 +1049,17 @@ def make_weight_streamed_prefill_step(
             cfg, n, batch_size, seq_len, cfg.compute_dtype
         )
         return transformer.block_group_prefill(cfg, group, cache, x, angles, sharder)
+
+    @jax.jit
+    def moe_prefill(ne, experts, x, angles):
+        # prefill overlaps the all-expert fetch with compute: the merged
+        # slice is bitwise-identical to the unsplit layer group's
+        merged = merge_expert_slice(ne, experts)
+        n = jax.tree.leaves(merged)[0].shape[0]
+        cache = transformer.init_cache_group(
+            cfg, n, batch_size, seq_len, cfg.compute_dtype
+        )
+        return transformer.block_group_prefill(cfg, merged, cache, x, angles, sharder)
 
     @jax.jit
     def head_fwd(group, x):
@@ -919,13 +1081,24 @@ def make_weight_streamed_prefill_step(
         if i == 0:
             box["x"], box["angles"] = embed_fwd(group, box["batch"])
             box["slices"] = []
+            box["parts"] = []
             return box["x"]
-        if i <= nlg:
-            box["x"], sl = group_prefill(group, box["x"], box["angles"])
-            box["slices"].append(sl)
+        if i == head_idx:
+            box["logits"] = head_fwd(group, box["x"])
+            return box["logits"]
+        u_i, last = unit_pos[i]
+        box["parts"].append(group)
+        if not last:
             return box["x"]
-        box["logits"] = head_fwd(group, box["x"])
-        return box["logits"]
+        parts, box["parts"] = box["parts"], []
+        if plan.units[u_i].kind == "moe":
+            box["x"], sl = moe_prefill(
+                parts[0], tuple(parts[1:]), box["x"], box["angles"]
+            )
+        else:
+            box["x"], sl = group_prefill(parts[0], box["x"], box["angles"])
+        box["slices"].append(sl)
+        return box["x"]
 
     ex = HostStreamExecutor(apply, indexed=True, engine=engine)
     sh_fwd = plan.group_shardings(param_shardings)
@@ -963,6 +1136,8 @@ def make_weight_streamed_decode_step(
     param_shardings: Optional[Pytree] = None,
     paged: bool = True,
     residency: Optional[ResidencyCache] = None,
+    route_experts: bool = True,
+    expert_stats: Optional[StreamStats] = None,
 ) -> Callable[..., tuple[jax.Array, Pytree]]:
     """Streamed-params decode step.
 
@@ -973,6 +1148,21 @@ def make_weight_streamed_decode_step(
     Per step the fetch groups stream in forward order while each layer
     group decodes against its static cache slice; the updated slices are
     concatenated back into the dense cache.
+
+    Route-aware expert streaming (``plan.expert_stream``): the pipeline
+    fetches only each MoE layer's non-expert group; the stage runs the
+    router first (:func:`transformer.block_decode_pre_moe`), then only the
+    routed experts' groups are fetched through the engine — resident
+    experts (the expert-granular LRU in ``residency``) pass through at zero
+    link bytes.  ``route_experts=False`` fetches all E experts through the
+    SAME path (the bench's all-expert baseline).  Expert fetch traffic is
+    accounted in ``expert_stats`` (its per-tier
+    ``requests_per_fetched_device_group`` stays 1.0: one coalesced request
+    per fetched expert group per device); the jitted apply re-traces per
+    distinct routed-subset size, which is bounded by ``moe_top_k``·batch.
+    The routed output is bitwise-equal to the all-expert and
+    device-resident runs: the gather of the routed rows happens before any
+    arithmetic, so the subset stage computes on the exact same values.
     """
     from repro.core import kvpager
 
@@ -981,8 +1171,18 @@ def make_weight_streamed_decode_step(
     )
     mode = "on_demand" if prefetch.on_demand else "prefetch"
     pf = None if mode == "on_demand" else prefetch
-    nlg = len(plan.layer_groups)
-    bounds = [(g.lo, g.hi) for g in plan.layer_groups]
+    if plan.expert_stream and expert_stats is None:
+        expert_stats = StreamStats()
+    #: the pipeline program: expert groups are fetched on demand AFTER the
+    #: router runs, so only each unit's first group rides the fetch pipeline
+    #: (identical to plan.groups when no unit spans multiple groups)
+    prog = (
+        [plan.groups[0]]
+        + [plan.groups[u.gidx[0]] for u in plan.units]
+        + [plan.groups[-1]]
+    )
+    head_pos = len(prog) - 1
+    bounds = [(u.lo, u.hi) for u in plan.units]
 
     @jax.jit
     def split(caches):
@@ -1005,6 +1205,28 @@ def make_weight_streamed_decode_step(
         )
 
     @jax.jit
+    def ne_dec(group, cache_slice, x, angles, pos):
+        return transformer.block_decode_pre_moe(
+            cfg, group, cache_slice, x, angles, pos, sharder
+        )
+
+    @jax.jit
+    def moe_apply(parts, ids, top_w, top_i, x_attn, h2):
+        # gather-then-cast over the fetched subset: the stacked rows are the
+        # same bytes the full (L, E, d, f) home holds, so this is bitwise-
+        # equal to moe.moe_decode over the unsplit layer group
+        stack = {
+            n: jnp.concatenate([t[n] for t in parts], axis=0)
+            for n in plan.expert_names
+        }
+        local = jnp.searchsorted(ids, top_i)
+        y = moe.decode_apply(cfg, stack, top_w, local, h2)
+        x = x_attn + y
+        if sharder is not None:
+            x = sharder.acts(x)
+        return x
+
+    @jax.jit
     def head_dec(group, x):
         return transformer.head_stage_logits(cfg, group, x)
 
@@ -1013,11 +1235,67 @@ def make_weight_streamed_decode_step(
         return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *slices)
 
     assemble = jax.jit(kvpager.assemble_view)
+    sh_all = plan.group_shardings(param_shardings)
+    sh_prog = [sh_all[g.index] for g in prog] if sh_all is not None else None
     box: dict = {}
 
+    def _fetch_experts(home, gs):
+        """Fetch routed expert groups through the engine (submit-all, then
+        wait in order), with the executor's submit/wait accounting mirrored
+        into ``expert_stats``; landed groups enter the residency LRU."""
+        st = expert_stats
+        futs = []
+        live = 0
+        for g in gs:
+            tree = residency.lookup(g.key) if residency is not None else None
+            if tree is None:
+                tree = home["groups"][g.key]
+            sh = sh_all[g.index] if sh_all is not None else None
+            fut = engine.submit_group(g.index, tree, device_shardings=sh)
+            if st is not None:
+                st.n_transfers += 1
+                st.n_groups += 1
+                st.h2d_requests += fut.n_requests
+                st.bytes_h2d += fut.nbytes
+                st.disk_requests += fut.disk_requests
+                st.bytes_disk += fut.disk_nbytes
+                st.n_devices = max(st.n_devices, fut.n_devices)
+                st.n_device_groups += fut.n_devices
+                if fut.is_resident:
+                    st.cache_hits += 1
+                else:
+                    st.cache_misses += 1
+                    st.unique_group_fetches += 1
+                    st.fetched_device_groups += fut.n_devices
+                live += fut.nbytes
+                st.peak_inflight_bytes = max(st.peak_inflight_bytes, live)
+            futs.append((g, fut))
+        parts = []
+        for g, fut in futs:
+            try:
+                w = fut.wait()
+            except BaseException:
+                if st is not None:
+                    st.retries += fut.retries
+                    st.give_ups += 1
+                raise
+            if st is not None:
+                st.retries += fut.retries
+                st.transfer_wait_s += w
+                st.wait_per_group.append(w)
+                st.disk_wait_s += fut.disk_wait_s
+                st.disk_wait_per_group.append(fut.disk_wait_s)
+            landed = fut.group()
+            if residency is not None:
+                residency.put(
+                    g.key, landed, plan.group_bytes(g, fetch=False)
+                )
+            parts.append(landed)
+        return parts
+
     def apply(i, carry, group):
+        g = prog[i]
         if residency is not None:
-            g = plan.groups[i]
             residency.put(
                 g.key, plan.cache_home_tree(g, group),
                 plan.group_bytes(g, fetch=False),
@@ -1026,31 +1304,50 @@ def make_weight_streamed_decode_step(
             box["x"], box["angles"] = embed_dec(group, box["batch"], box["pos"])
             box["new_slices"] = []
             return box["x"]
-        if i <= nlg:
-            box["x"], sl = group_dec(
+        if i == head_pos:
+            box["logits"] = head_dec(group, box["x"])
+            return box["logits"]
+        u = plan.units[i - 1]
+        if u.kind == "moe":
+            x_attn, h2, top_w, top_i, sl = ne_dec(
                 group, box["slices"][i - 1], box["x"], box["angles"], box["pos"]
+            )
+            if route_experts:
+                ids = np.unique(np.asarray(jax.device_get(top_i))).astype(
+                    np.int32
+                )
+            else:
+                ids = np.arange(cfg.n_experts, dtype=np.int32)
+            eg = plan.experts_for_layer(u.lo)
+            parts = _fetch_experts(box["home"], [eg[e] for e in ids])
+            box["x"] = moe_apply(
+                tuple(parts), jnp.asarray(ids), top_w, top_i, x_attn, h2
             )
             box["new_slices"].append(sl)
             return box["x"]
-        box["logits"] = head_dec(group, box["x"])
-        return box["logits"]
+        box["x"], sl = group_dec(
+            group, box["slices"][i - 1], box["x"], box["angles"], box["pos"]
+        )
+        box["new_slices"].append(sl)
+        return box["x"]
 
     ex = HostStreamExecutor(apply, indexed=True, engine=engine)
-    sh_fwd = plan.group_shardings(param_shardings)
 
     def decode(home, caches, batch, pos):
         box.clear()
         box["batch"] = batch
         box["pos"] = pos
+        box["home"] = home
         box["slices"] = split(caches)
-        groups = (
-            plan.fetch_thunks_forward(home, residency)
-            if residency is not None
-            else plan.fetch_groups_forward(home)
-        )
+        if residency is not None:
+            groups = [
+                (lambda g=g: plan.fetch_group(home, g, residency)) for g in prog
+            ]
+        else:
+            groups = [plan.fetch_group(home, g) for g in prog]
         ex.run(
             jnp.zeros(()), groups, mode=mode,
-            prefetch=pf, stats=stats, group_shardings=sh_fwd,
+            prefetch=pf, stats=stats, group_shardings=sh_prog,
         )
         logits, new_caches = box["logits"], concat0(tuple(box["new_slices"]))
         # a serving session calls this every step: dropping the old/new
@@ -1066,9 +1363,11 @@ def make_weight_streamed_decode_step(
         paged_decode.close = ex.close  # type: ignore[attr-defined]
         paged_decode.dense = decode  # type: ignore[attr-defined]
         paged_decode.residency = residency  # type: ignore[attr-defined]
+        paged_decode.expert_stats = expert_stats  # type: ignore[attr-defined]
         return paged_decode
     decode.close = ex.close  # type: ignore[attr-defined]
     decode.residency = residency  # type: ignore[attr-defined]
+    decode.expert_stats = expert_stats  # type: ignore[attr-defined]
     return decode
 
 

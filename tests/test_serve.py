@@ -518,9 +518,12 @@ def test_streamed_params_serve_matches_device_run(cfg, mesh, reference, param_ki
     assert res["peak_resident_bytes"] < res["total_cache_bytes"]
 
 
-def test_streamed_params_rejected_on_unpaged_path(cfg, mesh):
-    with pytest.raises(ValueError, match="paged session"):
-        sv.serve(
-            cfg, mesh, batch=2, prompt_len=9, gen=4, kv_page_len=0,
-            param_kind="pinned_host",
-        )
+def test_streamed_params_on_unpaged_path_bitwise(cfg, mesh):
+    """The unpaged schedule carries streamed params too (the route for
+    archs whose cache is not pageable): tokens bitwise vs device-resident."""
+    kw = dict(batch=2, prompt_len=9, gen=4, kv_page_len=0, warmup=False)
+    ref = sv.serve(cfg, mesh, **kw)
+    res = sv.serve(cfg, mesh, **kw, param_kind="pinned_host")
+    np.testing.assert_array_equal(res["generated"], ref["generated"])
+    ps = res["param_stats"]
+    assert ps.per_tier()["h2d"]["requests_per_fetched_device_group"] == 1.0

@@ -23,7 +23,13 @@ from repro.configs import get_smoke_config
 from repro.core.engine import EngineConfig, TransferEngine
 from repro.core.refspec import PrefetchSpec
 from repro.core.spillstore import SpillStore, is_disk_leaf
-from repro.core.weightstream import WeightStreamPlan, weight_stream_supported
+from proptest import given, settings
+from proptest import strategies as hst
+from repro.core.weightstream import (
+    WeightStreamPlan,
+    weight_stream_support,
+    weight_stream_supported,
+)
 from repro.data.synthetic import SyntheticConfig, synthetic_batch
 from repro.optim.adamw import AdamWConfig
 from repro.train import steps as st
@@ -85,11 +91,50 @@ def test_plan_byte_model_and_budget_guards(cfg):
     assert capped.peak_device_bytes(d) <= capped.device_budget_bytes
 
 
-def test_plan_rejects_unsupported_arch():
+def test_support_report_is_reasoned_per_layout():
+    """weight_stream_support replaces the old boolean: every layout gets a
+    train verdict AND a serve verdict with a surfaceable reason."""
+    uni = weight_stream_support(get_smoke_config("smollm-360m"))
+    assert uni and uni.layout == "uniform" and uni.serve_supported
+
     rg = get_smoke_config("recurrentgemma-2b")
-    assert not weight_stream_supported(rg)
-    with pytest.raises(ValueError, match="uniform"):
-        WeightStreamPlan(rg, st.abstract_params(rg))
+    rep = weight_stream_support(rg)
+    assert rep and weight_stream_supported(rg)  # train-side streams now
+    assert rep.layout == "unrolled"
+    assert not rep.serve_supported and "uniform" in rep.serve_reason
+
+    rep6 = weight_stream_support(dataclasses.replace(rg, n_layers=6))
+    assert rep6 and rep6.layout == "period" and not rep6.serve_supported
+
+    bad_cfg = dataclasses.replace(rg, n_layers=0)
+    bad = weight_stream_support(bad_cfg)
+    assert not bad and not bad.serve_supported
+    assert "n_layers" in bad.reason
+    # the plan constructor surfaces the report's reason verbatim
+    with pytest.raises(ValueError, match="at least one block layer"):
+        WeightStreamPlan(bad_cfg, {})
+
+
+def test_expert_stream_plan_guards():
+    dense = get_smoke_config("smollm-360m")
+    with pytest.raises(ValueError, match="MoE config"):
+        WeightStreamPlan(
+            dense, st.abstract_params(dense), expert_stream=True
+        )
+    rg = get_smoke_config("recurrentgemma-2b")
+    with pytest.raises(ValueError, match="uniform layout"):
+        WeightStreamPlan(rg, st.abstract_params(rg), expert_stream=True)
+
+
+def test_tree_bytes_rejects_dtypeless_leaf():
+    """Satellite bugfix pin: an unknown-dtype leaf once silently counted as
+    float32, corrupting every budget decision downstream — now it fails
+    loudly, naming the leaf."""
+    cfg = get_smoke_config("smollm-360m")
+    abs_p = st.abstract_params(cfg)
+    abs_p["blocks"] = dict(abs_p["blocks"], rogue=object())
+    with pytest.raises(TypeError, match="byte accounting"):
+        WeightStreamPlan(cfg, abs_p)
 
 
 def test_home_assemble_roundtrip(cfg, plan):
@@ -338,6 +383,196 @@ def test_groupwise_init_matches_monolithic_init(cfg, plan):
         for r, o in zip(flat_ref, flat_opt):
             np.testing.assert_array_equal(np.asarray(o["master"]), np.asarray(r))
             assert o["master"].dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# group-program partition invariants (property-based, every layout)
+# ---------------------------------------------------------------------------
+
+_PROP_CASES = {
+    "uniform": ("smollm-360m", {}, False),
+    "moe": ("mixtral-8x7b", {}, False),
+    "moe-experts": ("mixtral-8x7b", {}, True),
+    "unrolled": ("recurrentgemma-2b", {}, False),
+    "unrolled-xlstm": ("xlstm-1.3b", {}, False),
+    "period": ("recurrentgemma-2b", {"n_layers": 6}, False),
+}
+_PROP_INIT: dict = {}
+
+
+def _prop_case(name):
+    arch, over, es = _PROP_CASES[name]
+    if name not in _PROP_INIT:
+        c = get_smoke_config(arch)
+        if over:
+            c = dataclasses.replace(c, **over)
+        _PROP_INIT[name] = (c, st.init_train_state(jax.random.PRNGKey(1), c)[0])
+    return _PROP_INIT[name] + (es,)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    hst.sampled_from(sorted(_PROP_CASES)),
+    hst.integers(min_value=1, max_value=4),
+)
+def test_partition_invariants_every_layout(name, lpg):
+    """For every layout x layers_per_group: the fetch program's groups
+    disjointly cover the param tree, its byte model sums exactly, and its
+    spill-key namespace has no collisions."""
+    cfg_, params, es = _prop_case(name)
+    plan_ = WeightStreamPlan(
+        cfg_, st.abstract_params(cfg_), layers_per_group=lpg, expert_stream=es
+    )
+    # 1. home groups disjointly cover the tree: assemble(init_home) gives
+    #    back the exact structure and bytes
+    back = plan_.assemble(plan_.init_home(params))
+    ref = jax.tree_util.tree_flatten_with_path(params)[0]
+    got = jax.tree_util.tree_flatten_with_path(back)[0]
+    assert [p for p, _ in ref] == [p for p, _ in got]
+    for (_, a), (_, b) in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # 2. non-expert middle groups cover every layer exactly once; expert
+    #    groups enumerate every (moe layer, expert) exactly once
+    mids = [g for g in plan_.groups[1:-1] if g.kind != "expert"]
+    assert [l for g in mids for l in range(g.lo, g.hi)] == list(
+        range(cfg_.n_layers)
+    )
+    if es:
+        assert {(g.lo, g.expert) for g in plan_.expert_groups} == {
+            (l, e)
+            for l in range(cfg_.n_layers)
+            for e in range(cfg_.n_experts)
+        }
+    # 3. fetch-sequence bytes sum to the tree bytes, plus the tied embed
+    #    table the head stage re-reads (link traffic, not home bytes)
+    extra = plan_.embed_table_bytes if plan_.head_reads_embed else 0
+    assert sum(plan_.fetch_sequence_bytes()) == plan_.total_param_bytes + extra
+    # 4. spill/group key namespaces are collision-free
+    spill_keys = [plan_.spill_key(g) for g in plan_.groups]
+    assert len(set(spill_keys)) == len(spill_keys)
+    assert len({g.key for g in plan_.groups}) == plan_.n_groups
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous / period / expert-split group programs: streamed train
+# ---------------------------------------------------------------------------
+
+
+def _budgeted_plan(cfg_, lpg):
+    abs_p = st.abstract_params(cfg_)
+    free = WeightStreamPlan(cfg_, abs_p, layers_per_group=lpg)
+    budget_mb = free.peak_device_bytes(2) / 1e6
+    plan_ = WeightStreamPlan(
+        cfg_, abs_p, layers_per_group=lpg, device_budget_mb=budget_mb
+    )
+    assert plan_.device_budget_bytes is not None
+    return plan_
+
+
+@pytest.mark.parametrize(
+    "arch,over,lpg,disk",
+    [
+        ("recurrentgemma-2b", {}, 1, True),
+        ("recurrentgemma-2b", {"n_layers": 6}, 3, False),  # period layout
+        ("xlstm-1.3b", {}, 2, False),
+    ],
+)
+def test_hetero_streamed_train_bitwise_under_budget(arch, over, lpg, disk, opt_cfg):
+    """Unrolled and period-scanned archs now stream under
+    --device-budget-mb: same program topology, bitwise-equal losses across
+    every home kind."""
+    cfg_ = get_smoke_config(arch)
+    if over:
+        cfg_ = dataclasses.replace(cfg_, **over)
+    plan_ = _budgeted_plan(cfg_, lpg)
+    assert plan_.layout in ("unrolled", "period")
+    ref_losses, _, _ = _run_steps(cfg_, opt_cfg, plan_, "device")
+    losses, _, _ = _run_steps(cfg_, opt_cfg, plan_, "pinned_host")
+    assert losses == ref_losses
+    if disk:
+        with tempfile.TemporaryDirectory() as d:
+            store = SpillStore(d, ephemeral=True)
+            dlosses, _, _ = _run_steps(
+                cfg_, opt_cfg, plan_, "disk_host", store=store
+            )
+            store.close()
+        assert dlosses == ref_losses
+
+
+def test_expert_stream_train_bitwise_across_kinds(opt_cfg):
+    """Expert-split group programs train bitwise-identically wherever the
+    experts are homed, and close to the unsplit program (same math,
+    differently compiled)."""
+    cfg_ = get_smoke_config("mixtral-8x7b")
+    abs_p = st.abstract_params(cfg_)
+    plan_ = WeightStreamPlan(cfg_, abs_p, expert_stream=True)
+    assert plan_.expert_groups and plan_.layers_per_group == 1
+    ref_losses, ref_state, _ = _run_steps(cfg_, opt_cfg, plan_, "device")
+    losses, state, stats = _run_steps(cfg_, opt_cfg, plan_, "pinned_host")
+    assert losses == ref_losses
+    for key in ref_state["params"]["groups"]:
+        for a, b in zip(
+            jax.tree.leaves(state["params"]["groups"][key]),
+            jax.tree.leaves(ref_state["params"]["groups"][key]),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats.per_tier()["h2d"]["requests_per_fetched_device_group"] == 1.0
+    unsplit = WeightStreamPlan(cfg_, abs_p, layers_per_group=1)
+    u_losses, _, _ = _run_steps(cfg_, opt_cfg, unsplit, "device")
+    np.testing.assert_allclose(losses, u_losses, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# route-aware expert streaming: serve decode
+# ---------------------------------------------------------------------------
+
+
+def test_routed_decode_bitwise_and_cheaper_than_all_expert():
+    """Router-first decode fetches only the routed experts' groups: tokens
+    stay bitwise-equal to the device-resident run, expert link bytes drop
+    vs the all-expert baseline, and a warm expert LRU drops them further."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.serve import serve
+
+    cfg_ = get_smoke_config("mixtral-8x7b")
+    mesh = make_local_mesh()
+    kw = dict(batch=2, prompt_len=8, gen=5, kv_page_len=0, warmup=False)
+    base = serve(cfg_, mesh, **kw)
+    routed = serve(
+        cfg_, mesh, **kw,
+        param_kind="pinned_host", expert_stream=True, param_cache_mb=0,
+    )
+    alle = serve(
+        cfg_, mesh, **kw,
+        param_kind="pinned_host", expert_stream=True, route_experts=False,
+        param_cache_mb=0,
+    )
+    np.testing.assert_array_equal(routed["generated"], base["generated"])
+    np.testing.assert_array_equal(alle["generated"], base["generated"])
+    assert 0 < routed["expert_decode_bytes"] < alle["expert_decode_bytes"]
+    es = routed["expert_stats"]
+    assert es.per_tier()["h2d"]["requests_per_fetched_device_group"] == 1.0
+    # expert-granular LRU: an uncapped cache turns steady-state refetches
+    # into resident hits at zero link bytes
+    cached = serve(
+        cfg_, mesh, **kw, param_kind="pinned_host", expert_stream=True
+    )
+    np.testing.assert_array_equal(cached["generated"], base["generated"])
+    assert cached["expert_stats"].cache_hits > 0
+    assert cached["expert_decode_bytes"] < routed["expert_decode_bytes"]
+
+
+def test_serve_surfaces_streamed_param_rejection_reason():
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.serve import serve
+
+    rg = get_smoke_config("recurrentgemma-2b")
+    mesh = make_local_mesh()
+    with pytest.raises(ValueError, match="not group-pageable"):
+        serve(
+            rg, mesh, batch=1, prompt_len=4, gen=2, kv_page_len=0,
+            param_kind="pinned_host",
+        )
 
 
 def test_loose_external_engine_rejected_under_budget(cfg, opt_cfg):
