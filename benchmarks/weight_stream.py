@@ -46,6 +46,13 @@ Expert gates (the ISSUE 8 acceptance):
   * **expert requests**: exactly 1 H2D request per FETCHED
     (device, expert group).
 
+Sanitizer gate (the ISSUE 9 acceptance):
+
+  * **overhead**: the runtime hazard sanitizer (``REPRO_SANITIZE=1`` —
+    happens-before edges per keyed transfer, home fingerprints per cache
+    decision) costs <= 5% median per-step wall time on the streamed train
+    path, bitwise-identically.
+
 Emits ``results/bench/BENCH_weights.json``.  ``REPRO_BENCH_SMOKE=1``
 (set by ``benchmarks/run.py --smoke``) shrinks the workload for CI.
 """
@@ -54,6 +61,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import tempfile
+import time
 
 import jax
 import numpy as np
@@ -163,8 +171,11 @@ def _train_run(cfg, plan, budget_bytes, kind, distance):
     losses = [float(m0["loss"])]
     step.param_stats.reset()
     step.opt_stats.reset()
+    step_wall_s = []
     for k in range(1, STEPS):
+        t0 = time.perf_counter()
         state, m = step(state, synthetic_batch(cfg, sc, k))
+        step_wall_s.append(time.perf_counter() - t0)
         losses.append(float(m["loss"]))
     stats = step.param_stats
     waits = list(stats.wait_per_group)
@@ -197,6 +208,7 @@ def _train_run(cfg, plan, budget_bytes, kind, distance):
         "budget_bytes": budget_bytes,
         "total_param_bytes": plan.total_param_bytes,
         "steady_wait_per_group_s": float(np.median(steady)),
+        "step_wall_s": step_wall_s,
         "transfer_wait_s": stats.transfer_wait_s,
         "final_distance": stats.distance_trace[-1] if stats.distance_trace else None,
     }
@@ -379,6 +391,28 @@ def main() -> int:
     collapse = w0 / max(wa, 1e-9)
     overlap_ok = collapse >= 2.0
 
+    # ---- sanitizer overhead: REPRO_SANITIZE=1 on the clean streamed path ---
+    # the happens-before tracking is a dict op per keyed transfer — gate its
+    # median per-step cost at <= 5% over the plain run (plus a 5 ms jitter
+    # floor so a shared runner's scheduling noise cannot flake the gate)
+    os.environ["REPRO_SANITIZE"] = "1"
+    try:
+        san_losses, _, san_row = _train_run(
+            cfg, plan, budget_bytes, "pinned_host", "auto"
+        )
+    finally:
+        os.environ.pop("REPRO_SANITIZE", None)
+    san_row["phase"] = "train_sanitized"
+    san_row["bitwise_equal_to_device"] = san_losses == ref_losses
+    bitwise_ok &= san_row["bitwise_equal_to_device"]
+    plain_step_s = float(
+        np.median(by[("pinned_host", "auto")]["step_wall_s"])
+    )
+    san_step_s = float(np.median(san_row["step_wall_s"]))
+    san_row["overhead_vs_plain"] = san_step_s / max(plain_step_s, 1e-9)
+    sanitize_overhead_ok = san_step_s <= plain_step_s * 1.05 + 0.005
+    rows.append(san_row)
+
     # ---- paged decode: tokens bitwise vs the device-resident serve ---------
     ref_tokens, dref_row = _decode_run(cfg, "device", "auto", budget_mb)
     dref_row["reference"] = True
@@ -479,11 +513,18 @@ def main() -> int:
         f"tokens bitwise every kind x distance: {expert_bitwise_ok}; "
         f"1 req/fetched expert group: {expert_requests_ok}"
     )
+    print(
+        f"sanitizer (REPRO_SANITIZE=1): median step "
+        f"{san_step_s * 1e3:.1f} ms vs plain {plain_step_s * 1e3:.1f} ms = "
+        f"{san_row['overhead_vs_plain']:.3f}x (gate <= 1.05x): "
+        f"{sanitize_overhead_ok}"
+    )
     return 0 if (
         bitwise_ok and budget_ok and requests_ok and overlap_ok
         and zero_slack_ok and residency_ok and cached_budget_ok
         and decode_residency_ok and expert_traffic_ok
         and expert_bitwise_ok and expert_requests_ok
+        and sanitize_overhead_ok
     ) else 1
 
 

@@ -86,6 +86,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.schedcheck import HazardError, HazardSanitizer, sanitize_enabled
+
 log = logging.getLogger("repro.engine")
 
 __all__ = [
@@ -218,6 +220,13 @@ class EngineConfig:
     close_timeout_s: float = 5.0
     #: CRC-verify spill-store chunk bytes in the disk stage before packing
     verify_spill: bool = True
+    # -- hazard sanitizer (static analyzer's runtime counterpart) -----------
+    #: record a happens-before edge per ticket and raise
+    #: :class:`repro.core.schedcheck.HazardError` on writeback-vs-fetch RAW
+    #: hazards and staging-pool lifetime violations.  Defaults from the
+    #: ``REPRO_SANITIZE`` environment variable so chaos/fault suites can
+    #: run sanitized without threading a flag through every constructor.
+    sanitize: bool = dataclasses.field(default_factory=sanitize_enabled)
 
 
 def static_auto_distance(n_chunks: int, cap: int = 4) -> int:
@@ -579,10 +588,13 @@ def _retryable(e: BaseException) -> bool:
     """Faults the bounded-retry loops may absorb.  Corruption is excluded:
     its recovery path (re-read, durable-home rewrite) already ran inside
     :func:`repro.core.spillstore.verify_disk_leaf`, and retrying would just
-    re-consume the same bad bytes."""
+    re-consume the same bad bytes.  :class:`HazardError` is excluded too:
+    a retried hazard is a hidden hazard."""
     from repro.core.spillstore import SpillCorruptionError
 
-    return not isinstance(e, (KeyboardInterrupt, SystemExit, SpillCorruptionError))
+    return not isinstance(
+        e, (KeyboardInterrupt, SystemExit, SpillCorruptionError, HazardError)
+    )
 
 
 class TransferFuture:
@@ -700,9 +712,12 @@ class _DiskFetchTicket:
 
 class _WritebackTicket:
     __slots__ = ("index", "n_requests", "nbytes", "retries", "_event", "_host",
-                 "_error", "ready_at")
+                 "_error", "ready_at", "key")
 
-    def __init__(self, index: int, n_requests: int, nbytes: int):
+    def __init__(self, index: int, n_requests: int, nbytes: int, key=None):
+        #: logical group key (sanitizer happens-before tracking); None when
+        #: the submitter has no stable name for the group
+        self.key = key
         self.index = index
         self.n_requests = n_requests
         self.nbytes = nbytes
@@ -739,6 +754,11 @@ class TransferEngine:
 
     def __init__(self, config: Optional[EngineConfig] = None) -> None:
         self.config = config or EngineConfig()
+        #: runtime hazard sanitizer (``EngineConfig(sanitize=True)`` /
+        #: ``REPRO_SANITIZE=1``); None on the un-instrumented fast path
+        self.sanitizer: Optional[HazardSanitizer] = (
+            HazardSanitizer() if self.config.sanitize else None
+        )
         self._tasks: "queue.SimpleQueue" = queue.SimpleQueue()
         self._worker: Optional[threading.Thread] = None
         self._layouts: dict[tuple, GroupLayout] = {}
@@ -892,11 +912,19 @@ class TransferEngine:
         """
         free = self._staging_free[sig]
         if free:
-            return free.pop()
+            staging = free.pop()
+            if self.sanitizer is not None:
+                self.sanitizer.on_staging_acquire(id(staging), from_pool=True)
+            return staging
         self.staging_allocs += 1
-        return layout.new_staging()
+        staging = layout.new_staging()
+        if self.sanitizer is not None:
+            self.sanitizer.on_staging_acquire(id(staging), from_pool=False)
+        return staging
 
     def _release_staging(self, sig: tuple, staging: Any) -> None:
+        if self.sanitizer is not None:
+            self.sanitizer.on_staging_release(id(staging))
         free = self._staging_free[sig]
         if len(free) < max(1, self.config.staging_slots):
             free.append(staging)
@@ -986,8 +1014,15 @@ class TransferEngine:
         self._disk_tasks.put((ticket, disk_leaves))
         return ticket
 
-    def submit_group(self, index: int, group: Pytree, *, device_shardings=None) -> TransferFuture:
+    def submit_group(
+        self, index: int, group: Pytree, *, device_shardings=None, key=None
+    ) -> TransferFuture:
         """Queue the H2D transfer of one group; returns immediately.
+
+        ``key`` is the group's logical name (plan group key, KV page id):
+        the hazard sanitizer refuses a fetch whose key has a D2H writeback
+        still in flight.  ``key=None`` transfers are unchecked — exactly
+        the transfers the static analyzer cannot name either.
 
         Coalescing composes with explicit ``device_shardings``
         (multi-device layouts): the group stages through one buffer per
@@ -1004,6 +1039,8 @@ class TransferEngine:
         """
         from repro.core.spillstore import is_disk_leaf
 
+        if self.sanitizer is not None:
+            self.sanitizer.on_fetch(key)
         leaves = jax.tree.leaves(group)
         sh_flat = None
         if device_shardings is not None:
@@ -1069,12 +1106,18 @@ class TransferEngine:
         self._tasks.put(("h2d", fut, group, sh_flat, False, None, None))
         return fut
 
-    def submit_writeback(self, index: int, group_out: Pytree) -> _WritebackTicket:
-        """Queue the D2H copy of an ``rw`` group's output; returns immediately."""
+    def submit_writeback(
+        self, index: int, group_out: Pytree, *, key=None
+    ) -> _WritebackTicket:
+        """Queue the D2H copy of an ``rw`` group's output; returns
+        immediately.  ``key`` names the group for the hazard sanitizer:
+        until the ticket drains, a same-key fetch is a RAW hazard."""
         leaves = jax.tree.leaves(group_out)
         nbytes = sum(x.size * x.dtype.itemsize for x in leaves)
-        ticket = _WritebackTicket(index, len(leaves), nbytes)
+        ticket = _WritebackTicket(index, len(leaves), nbytes, key=key)
         self._pending_wb.append(ticket)
+        if self.sanitizer is not None:
+            self.sanitizer.on_writeback(key)
         self._ensure_worker()
         self._tasks.put(("d2h", ticket, group_out))
         return ticket
@@ -1084,13 +1127,20 @@ class TransferEngine:
         order (FIFO worker + ordered tickets ⇒ paper's per-device ordering)."""
         tickets = sorted(self._pending_wb, key=lambda t: t.index)
         self._pending_wb = []
-        return [t.result() for t in tickets]
+        out = [t.result() for t in tickets]
+        if self.sanitizer is not None:
+            # only reached when every result landed: a failed drain keeps
+            # its keys pending, so a restart must discard before re-fetching
+            self.sanitizer.on_drained([t.key for t in tickets])
+        return out
 
     def discard_writebacks(self) -> int:
         """Drop any pending writeback tickets (a failed run may have left
         some behind; the next run must not drain stale groups).  Returns
         the number discarded."""
         n = len(self._pending_wb)
+        if self.sanitizer is not None:
+            self.sanitizer.on_drained([t.key for t in self._pending_wb])
         self._pending_wb = []
         return n
 

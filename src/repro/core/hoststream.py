@@ -284,10 +284,14 @@ class HostStreamExecutor:
     _UNSET = object()
 
     # -- transfer primitive (the paper's channel cell write) ----------------
-    def _submit(self, index: int, group: Pytree, shardings: Any = _UNSET):
+    def _submit(
+        self, index: int, group: Pytree, shardings: Any = _UNSET, key=None
+    ):
         if shardings is self._UNSET:
             shardings = self._shardings
-        return self._engine.submit_group(index, group, device_shardings=shardings)
+        return self._engine.submit_group(
+            index, group, device_shardings=shardings, key=key
+        )
 
     def run(
         self,
@@ -298,6 +302,7 @@ class HostStreamExecutor:
         mode: str = "prefetch",
         stats: Optional[StreamStats] = None,
         group_shardings: Optional[Sequence[Pytree]] = None,
+        group_keys: Optional[Sequence[Optional[str]]] = None,
     ) -> tuple[Pytree, Optional[list]]:
         """Execute all groups under the given schedule.  Returns the final
         carry (+ written-back host groups when ``writeback``).
@@ -306,6 +311,11 @@ class HostStreamExecutor:
         group, aligned with ``groups``) for runs whose groups have
         heterogeneous layouts; overrides the constructor's broadcast
         ``device_shardings``.
+
+        ``group_keys``: optional logical names (one per group, aligned
+        with ``groups``) threaded to the engine's hazard sanitizer so
+        fetches and writebacks of the same group form a happens-before
+        chain across runs; unnamed groups are unchecked.
 
         A ``groups`` entry may be a zero-arg callable, resolved when its
         transfer is SUBMITTED (not when the run was scheduled): the weight
@@ -358,6 +368,10 @@ class HostStreamExecutor:
                 f"group_shardings has {len(group_shardings)} entries for "
                 f"{n} groups"
             )
+        if group_keys is not None and len(group_keys) != n:
+            raise ValueError(
+                f"group_keys has {len(group_keys)} entries for {n} groups"
+            )
 
         #: H2D payload bytes of submitted-but-not-yet-consumed groups — the
         #: streamed-state device-residency model (peak gated by the weight
@@ -367,10 +381,11 @@ class HostStreamExecutor:
         def submit(i: int):
             nonlocal live_bytes
             group = groups[i]() if callable(groups[i]) else groups[i]
+            key = group_keys[i] if group_keys is not None else None
             if group_shardings is None:
-                fut = self._submit(i, group)
+                fut = self._submit(i, group, key=key)
             else:  # per-group override, authoritative (None = default)
-                fut = self._submit(i, group, group_shardings[i])
+                fut = self._submit(i, group, group_shardings[i], key=key)
             st.n_transfers += 1
             st.h2d_requests += fut.n_requests
             st.bytes_h2d += fut.nbytes
@@ -415,7 +430,10 @@ class HostStreamExecutor:
                 st.disk_wait_per_group.append(fut.disk_wait_s)
             t0 = time.perf_counter()
             for i, fut in enumerate(futs):
-                carry = self._step(i, carry, fut.group(), outs, st, wb_tickets)
+                carry = self._step(
+                    i, carry, fut.group(), outs, st, wb_tickets,
+                    wb_key=group_keys[i] if group_keys is not None else None,
+                )
                 live_bytes -= fut.nbytes
             jax.block_until_ready(carry)
             st.compute_s += time.perf_counter() - t0
@@ -439,7 +457,10 @@ class HostStreamExecutor:
                 if controller is not None:
                     distance = controller.observe(w)
                 t0 = time.perf_counter()
-                carry = self._step(i, carry, fut.group(), outs, st, wb_tickets)
+                carry = self._step(
+                    i, carry, fut.group(), outs, st, wb_tickets,
+                    wb_key=group_keys[i] if group_keys is not None else None,
+                )
                 live_bytes -= fut.nbytes
                 st.compute_s += time.perf_counter() - t0
             t0 = time.perf_counter()
@@ -468,6 +489,7 @@ class HostStreamExecutor:
         outs: Optional[list],
         st: StreamStats,
         wb_tickets: Optional[list] = None,
+        wb_key: Optional[str] = None,
     ) -> Pytree:
         apply = (
             (lambda c, b: self._apply(index, c, b)) if self._indexed else self._apply
@@ -479,7 +501,9 @@ class HostStreamExecutor:
             if self._engine.config.async_writeback:
                 # pipelined writeback: D2H runs on the engine worker while
                 # the next group computes; drained in order after the loop
-                ticket = self._engine.submit_writeback(len(outs), group_out)
+                ticket = self._engine.submit_writeback(
+                    len(outs), group_out, key=wb_key
+                )
                 st.d2h_requests += ticket.n_requests
                 if wb_tickets is not None:
                     wb_tickets.append(ticket)

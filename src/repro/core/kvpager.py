@@ -247,7 +247,8 @@ class PageStream:
 
     def _submit(self, key: tuple, tree: Pytree):
         fut = self._engine.submit_group(
-            self._seq, tree, device_shardings=self._shardings
+            self._seq, tree, device_shardings=self._shardings,
+            key=f"kv/{key[0]}/p{key[1]:05d}",
         )
         self._seq += 1
         self._inflight[key] = fut
@@ -482,7 +483,9 @@ class KVPager:
             rec.dev = None
             rec.state = _COLD
             return
-        self.engine.submit_writeback(self._wb_seq, rec.dev)
+        self.engine.submit_writeback(
+            self._wb_seq, rec.dev, key=self._page_key(table.rid, p)
+        )
         self._wb_seq += 1
         self._pending_demotions.append((table, p))
         rec.dev = None

@@ -47,6 +47,8 @@ from typing import Any, Iterable, Optional
 
 import jax
 
+from repro.core.schedcheck import HazardError, sanitize_enabled, tree_fingerprint
+
 __all__ = ["ResidencyCache"]
 
 Pytree = Any
@@ -72,10 +74,23 @@ class ResidencyCache:
     (the executor's submit/apply path), never from the engine worker.
     """
 
-    def __init__(self, capacity_bytes: Optional[int] = None) -> None:
+    def __init__(
+        self,
+        capacity_bytes: Optional[int] = None,
+        *,
+        sanitize: Optional[bool] = None,
+    ) -> None:
         if capacity_bytes is not None and capacity_bytes < 0:
             raise ValueError(f"capacity_bytes must be >= 0, got {capacity_bytes}")
         self.capacity_bytes = capacity_bytes
+        #: hazard-sanitizer mode (``REPRO_SANITIZE=1`` when unset): record a
+        #: fingerprint of each key's HOME tree at fetch time and raise
+        #: :class:`~repro.core.schedcheck.HazardError` when a later hit
+        #: would serve a device copy whose home has been swapped out from
+        #: under it (restart / reshard without :meth:`clear`) — the
+        #: stale-residency RAW the static analyzer checks per schedule
+        self.sanitize = sanitize_enabled() if sanitize is None else bool(sanitize)
+        self._home_marks: dict = {}  # key -> tree fingerprint at fetch
         self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
         self.resident_bytes = 0
         #: high-water mark of ``resident_bytes`` — the cache's term of the
@@ -121,10 +136,30 @@ class ResidencyCache:
         e = self._entries.get(key)
         return e.tree if e is not None else None
 
+    def sanitize_home(self, key: str, home_tree: Pytree, *, hit: bool) -> None:
+        """Sanitizer check at a fetch decision point: on a miss, remember
+        what ``key``'s home tree looks like; on a hit, assert the home is
+        still the one the cached device copy was fetched from.  A mismatch
+        means the home was rebound or mutated without invalidating the
+        cache — the hit would silently serve stale weights."""
+        if not self.sanitize:
+            return
+        mark = tree_fingerprint(home_tree)
+        prev = self._home_marks.get(key)
+        if hit and prev is not None and prev != mark:
+            raise HazardError(
+                f"sanitizer: stale residency RAW on group {key!r} — the "
+                "host home changed since this device copy was cached "
+                "(restart or reshard without ResidencyCache.clear()?); "
+                "a cache hit would serve pre-change weights"
+            )
+        self._home_marks[key] = mark
+
     # ------------------------------------------------------------ mutation
     def _drop(self, key: str) -> None:
         e = self._entries.pop(key)
         self.resident_bytes -= e.nbytes
+        self._home_marks.pop(key, None)
 
     def put(
         self,
@@ -194,6 +229,7 @@ class ResidencyCache:
         half-updated cache must never feed the retried step."""
         n = len(self._entries)
         self._entries.clear()
+        self._home_marks.clear()
         self.resident_bytes = 0
         self.invalidations += n
 

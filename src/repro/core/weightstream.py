@@ -515,7 +515,19 @@ class WeightStreamPlan:
         window: cached groups are extra device residency the stream does
         not see (a cache hit transfers zero bytes, so it never lands in
         the window term — the sum is a conservative bound, never an
-        undercount)."""
+        undercount).
+
+        This is the documented FAST PATH of the occupancy model.  The
+        exact per-point model lives in
+        :func:`repro.core.schedcheck.analyze_train_schedule`, which
+        replays the executor loop group by group; on the uniform, period
+        and unrolled layouts without expert streaming or a cache the two
+        are EQUAL (asserted in ``tests/test_schedcheck.py``), and the
+        fast path upper-bounds the exact model everywhere else (expert
+        streaming fetches at group granularity below the unit window;
+        cache hits fetch zero bytes below the constant ``cached_bytes``
+        term) — so a distance this model admits can never overrun the
+        budget at run time."""
         return cached_bytes + self._window_max(
             self._window_sequence_bytes(), distance
         )
@@ -541,7 +553,12 @@ class WeightStreamPlan:
         learn its way past the budget.  ``cached_bytes`` reserves residency
         for the group cache: window + cached bytes share the one budget, so
         a caller pinning cache capacity gets a correspondingly narrower
-        window cap."""
+        window cap.
+
+        Sized against the :meth:`peak_device_bytes` fast path; since that
+        bound dominates the exact per-point model (see
+        :mod:`repro.core.schedcheck`), every distance admitted here is
+        statically verifiable against the same budget."""
         if self.device_budget_bytes is None:
             return cap
         d = 1
@@ -689,6 +706,10 @@ class WeightStreamPlan:
         resident embed group even on a head miss, so the table's bytes are
         never re-read across the link while its source group is resident."""
         tree = cache.lookup(g.key) if cache is not None else None
+        if cache is not None and getattr(cache, "sanitize", False):
+            cache.sanitize_home(
+                g.key, home["groups"][g.key], hit=tree is not None
+            )
         if tree is None:
             tree = home["groups"][g.key]
         if g.kind == "head" and self.head_reads_embed:

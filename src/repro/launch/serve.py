@@ -57,6 +57,29 @@ def _round_up(n: int, m: int) -> int:
     return (n + m - 1) // m * m
 
 
+def _schedule_note(plan, *, distance, cache_capacity, budget_mb, kv,
+                   route_experts) -> str:
+    """Best-effort analyzer occupancy report appended to budget errors, so
+    a rejected flag combination names the program points that overrun
+    instead of just the closed-form floor."""
+    try:
+        from repro.core import schedcheck as sc
+
+        report = sc.analyze_serve_schedule(
+            plan,
+            distance=distance,
+            cache_capacity=cache_capacity,
+            budget_bytes=(
+                int(budget_mb * 1e6) if budget_mb is not None else None
+            ),
+            kv=kv,
+            route_experts=route_experts,
+        )
+        return "\n" + str(report)
+    except Exception:
+        return ""
+
+
 def _prompt_batch(cfg, tokens) -> dict:
     """(B, S) prompt ids -> the model's batch dict (codebook archs replicate
     the ids over codebooks, as the seed serve loop did)."""
@@ -176,6 +199,10 @@ class ServeSession:
         #: device-resident across prefill/decode steps (serve params are
         #: immutable, so entries are never invalidated, only LRU-evicted)
         self.param_residency: Optional[ResidencyCache] = None
+        #: static analyzer report for the streamed-weight + KV page schedule
+        #: (:func:`repro.core.schedcheck.analyze_serve_schedule`); ``None``
+        #: for device-resident weights
+        self.schedule_report = None
         if param_kind != "device":
             from repro.core.engine import EngineConfig
             from repro.core.weightstream import (
@@ -196,22 +223,46 @@ class ServeSession:
                     f"{support.serve_reason or support.reason}"
                 )
             budget = device_budget_mb
+            # per-(slot,page) device bytes — the hot-window reservation unit
+            # and the analyzer's KV occupancy baseline
+            page_nbytes = sum(
+                int(np.prod(s.shape)) * s.dtype.itemsize
+                for s in jax.tree.leaves(page_template(template, page_len))
+            )
+            kv_desc = dict(
+                slots=slots,
+                page_len=page_len,
+                hot_pages=hot_pages,
+                page_nbytes=page_nbytes,
+                max_len=self.max_len,
+            )
             if budget is not None:
                 # the device budget is shared: the pager's hot window (the
                 # current page + hot_pages full pages + the shared zero
                 # page, per slot) takes its cut first, weights stream under
                 # the remainder
-                page_nbytes = sum(
-                    int(np.prod(s.shape)) * s.dtype.itemsize
-                    for s in jax.tree.leaves(page_template(template, page_len))
-                )
                 hot_mb = slots * (hot_pages + 2) * page_nbytes / 1e6
                 budget = budget - hot_mb
                 if budget <= 0:
+                    probe = WeightStreamPlan(
+                        cfg,
+                        st.abstract_params(cfg),
+                        layers_per_group=param_layers_per_group,
+                        device_budget_mb=None,
+                        expert_stream=expert_stream,
+                    )
                     raise ValueError(
                         f"device_budget_mb={device_budget_mb} is consumed by "
                         f"the KV hot window ({hot_mb:.1f} MB); raise the "
                         "budget or shrink hot_pages/page_len"
+                        + _schedule_note(
+                            probe,
+                            distance=1,
+                            cache_capacity=0,
+                            budget_mb=device_budget_mb,
+                            kv=kv_desc,
+                            route_experts=route_experts,
+                        )
                     )
             self._wplan = WeightStreamPlan(
                 cfg,
@@ -239,6 +290,14 @@ class ServeSession:
                         f"param_cache_mb={param_cache_mb}; raise the budget, "
                         "shrink hot_pages/page_len/param_layers_per_group, or "
                         "lower param_cache_mb"
+                        + _schedule_note(
+                            self._wplan,
+                            distance=1,
+                            cache_capacity=cache_cap,
+                            budget_mb=device_budget_mb,
+                            kv=kv_desc,
+                            route_experts=route_experts,
+                        )
                     )
             cache_reserved = (
                 (cache_cap or 0) if budget is not None else 0
@@ -266,6 +325,32 @@ class ServeSession:
                     "(window + residency cache share the budget); "
                     "pass an engine configured from the plan (or no engine)"
                 )
+            # static schedule verification: replay the fetch program the
+            # session is about to run (prefill walk, router-first decode,
+            # KV page demote/readmit) and refuse construction on any
+            # occupancy overrun or transfer hazard (core/schedcheck)
+            from repro.core.schedcheck import (
+                analyze_serve_schedule,
+                verify_schedule,
+            )
+
+            self.schedule_report = analyze_serve_schedule(
+                self._wplan,
+                distance=(
+                    engine.config.max_distance
+                    if engine is not None
+                    else engine_cfg.max_distance
+                ),
+                cache_capacity=cache_cap,
+                budget_bytes=(
+                    int(device_budget_mb * 1e6)
+                    if device_budget_mb is not None
+                    else None
+                ),
+                kv=kv_desc,
+                route_experts=route_experts,
+            )
+            verify_schedule(self.schedule_report)
         self.plan = sh.make_plan(mesh, mode="serve")
         key = jax.random.PRNGKey(seed)
         if self._wplan is not None:
@@ -657,6 +742,27 @@ def _serve_unpaged(
             engine = own_engine = TransferEngine(
                 EngineConfig(max_distance=wplan.max_distance_for_budget())
             )
+        # static schedule verification (same contract as ServeSession):
+        # refuse to serve a fetch program that can overrun the budget or
+        # re-fetch through a pending writeback
+        from repro.core.schedcheck import (
+            analyze_serve_schedule,
+            verify_schedule,
+        )
+
+        verify_schedule(
+            analyze_serve_schedule(
+                wplan,
+                distance=engine.config.max_distance,
+                cache_capacity=cache_cap,
+                route_experts=route_experts,
+                fan_in=(
+                    max(1, getattr(cfg, "moe_top_k", 2)) * batch
+                    if route_experts
+                    else None
+                ),
+            )
+        )
         sharder = sh.make_sharder(plan, st.abstract_params(cfg), batch)
         params = st.init_weight_streamed_params(key, cfg, wplan)
         if param_kind == "disk_host":
@@ -1031,13 +1137,77 @@ def main() -> int:
                     help="split MoE experts into per-expert fetch groups "
                     "and fetch only the routed top-k per decode step "
                     "(requires a streamed --param-kind and an MoE arch)")
+    ap.add_argument("--verify-schedule", action="store_true",
+                    help="statically analyze the streamed-weight + KV page "
+                    "schedule before serving, print the occupancy report, "
+                    "and fail fast on any hazard (requires a streamed "
+                    "--param-kind)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.verify_schedule and args.param_kind == "device":
+        ap.error("--verify-schedule requires --param-kind pinned_host "
+                 "or disk_host (device-resident weights have no schedule)")
+
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_local_mesh(model=args.model_parallel)
     distance = args.distance if args.distance == AUTO else int(args.distance)
+    if args.verify_schedule:
+        from repro.core import schedcheck as sc
+        from repro.core.weightstream import WeightStreamPlan
+
+        budget = args.device_budget_mb
+        kv_desc = None
+        if args.kv_page_len > 0:
+            max_len = _round_up(
+                args.prompt_len + args.gen, args.kv_page_len
+            )
+            template = st.abstract_caches(cfg, 1, max_len)
+            if paged_cache_supported(template):
+                page_nbytes = sum(
+                    int(np.prod(s.shape)) * s.dtype.itemsize
+                    for s in jax.tree.leaves(
+                        page_template(template, args.kv_page_len)
+                    )
+                )
+                kv_desc = dict(
+                    slots=args.batch,
+                    page_len=args.kv_page_len,
+                    hot_pages=args.hot_pages,
+                    page_nbytes=page_nbytes,
+                    max_len=max_len,
+                )
+                if budget is not None:
+                    budget -= (
+                        args.batch * (args.hot_pages + 2) * page_nbytes / 1e6
+                    )
+        wplan = WeightStreamPlan(
+            cfg,
+            st.abstract_params(cfg),
+            device_budget_mb=budget,
+            expert_stream=args.expert_stream,
+        )
+        if args.param_cache_mb is not None:
+            cache_cap = int(args.param_cache_mb * 1e6)
+        else:
+            cache_cap = wplan.residency_capacity_bytes()
+        cache_reserved = (cache_cap or 0) if budget is not None else 0
+        report = sc.analyze_serve_schedule(
+            wplan,
+            distance=wplan.max_distance_for_budget(
+                cached_bytes=cache_reserved
+            ),
+            cache_capacity=cache_cap,
+            budget_bytes=(
+                int(args.device_budget_mb * 1e6)
+                if args.device_budget_mb is not None
+                else None
+            ),
+            kv=kv_desc,
+        )
+        print(report)
+        sc.verify_schedule(report)
     res = serve(
         cfg,
         mesh,

@@ -51,6 +51,7 @@ def build_trainer(
     param_layers_per_group=None,
     expert_stream: bool = False,
     transfer_retries: int = 1,
+    verify_schedule: bool = False,
 ):
     """Assemble (driver, jitted step) for a config on a mesh.
 
@@ -205,6 +206,19 @@ def build_trainer(
             if residency.capacity_bytes is None
             else f"{residency.capacity_bytes / 1e6:.1f} MB",
         )
+        if verify_schedule:
+            # --verify-schedule: print the static analysis (the streamed
+            # step re-runs it at construction and fails fast regardless)
+            from repro.core import schedcheck
+
+            report = schedcheck.analyze_train_schedule(
+                plan,
+                distance=plan.max_distance_for_budget(),
+                cache_capacity=residency.capacity_bytes,
+                spill=param_kind == "disk_host",
+            )
+            print(report)
+            schedcheck.verify_schedule(report)
         engine = TransferEngine(
             EngineConfig(
                 max_distance=plan.max_distance_for_budget(),
@@ -273,6 +287,10 @@ def build_trainer(
             # the step (checkpoint commit, watchdog) skips the step's own
             # failure clear, so the restart hook must drop them too
             residency.clear()
+            # a kill mid-drain can leave D2H tickets pending; the restored
+            # step must never drain them into its outputs, and the hazard
+            # sanitizer would (correctly) flag the re-fetch of their groups
+            engine.discard_writebacks()
 
         driver = TrainDriver(
             driver_cfg,
@@ -515,7 +533,17 @@ def main() -> int:
         help="write the per-step metric history as JSON to this path "
         "(chaos tests diff loss series across runs bitwise)",
     )
+    ap.add_argument(
+        "--verify-schedule",
+        action="store_true",
+        help="statically verify the streamed-weight schedule before "
+        "running (print the per-phase occupancy/hazard analysis, fail "
+        "fast on any violation; see repro.core.schedcheck)",
+    )
     args = ap.parse_args()
+    if args.verify_schedule and args.param_kind == "device":
+        ap.error("--verify-schedule requires a streamed --param-kind "
+                 "(pinned_host or disk_host)")
 
     logging.basicConfig(level=logging.INFO, format="%(levelname)s %(message)s")
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -558,6 +586,7 @@ def main() -> int:
         param_layers_per_group=args.param_layers_per_group,
         expert_stream=args.expert_stream,
         transfer_retries=args.transfer_retries,
+        verify_schedule=args.verify_schedule,
     )
     t0 = time.time()
     driver.run()

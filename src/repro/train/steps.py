@@ -26,6 +26,7 @@ from repro.core.engine import EngineConfig, TransferEngine
 from repro.core.hoststream import HostStreamExecutor, StreamStats
 from repro.core.refspec import PrefetchSpec
 from repro.core.residency import ResidencyCache
+from repro.core.schedcheck import analyze_train_schedule, verify_schedule
 from repro.core.weightstream import WeightStreamPlan, merge_expert_slice
 from repro.models import moe, transformer
 from repro.optim.adamw import (
@@ -270,6 +271,7 @@ def make_streamed_opt_updater(
             prefetch=prefetch,
             stats=stats,
             group_shardings=group_shardings,
+            group_keys=[f"opt/{i}" for i in range(len(groups))],
         )
 
         # disk-homed groups go back to their home tier: write the updated
@@ -574,6 +576,19 @@ def make_weight_streamed_train_step(
             "(prefetch window + residency cache share the budget); "
             "configure the engine from the plan"
         )
+    # static schedule verification at construction: symbolically execute
+    # the three phases at the engine's widest window and fail fast on any
+    # budget/hazard/pin violation — a schedule bug surfaces here, not 40
+    # minutes into a streamed run (see repro.core.schedcheck)
+    verify_schedule(
+        analyze_train_schedule(
+            plan,
+            distance=engine.config.max_distance,
+            cached=cache is not None,
+            cache_capacity=cache.capacity_bytes if cache is not None else None,
+            spill=param_kind == "disk_host",
+        )
+    )
     stats = stats if stats is not None else StreamStats()
     opt_stats = opt_stats if opt_stats is not None else StreamStats()
     f32 = jnp.float32
@@ -909,6 +924,7 @@ def make_weight_streamed_train_step(
         ex_f.run(
             jnp.zeros(()), fwd_groups, mode=mode, prefetch=pf, stats=stats,
             group_shardings=sh_fwd,
+            group_keys=[g.key for g in plan.groups],
         )
 
         # phase B: reverse fetch order [middle reversed, embed]; grads drain
@@ -922,6 +938,7 @@ def make_weight_streamed_train_step(
         _, grad_outs = ex_b.run(
             box["ct"], bwd_groups, mode=mode, prefetch=pf, stats=stats,
             group_shardings=sh_bwd,
+            group_keys=[g.key for g in bwd_order],
         )
 
         step_no = int(np.asarray(opt["step"])) + 1
@@ -950,6 +967,7 @@ def make_weight_streamed_train_step(
         _, o_outs = ex_o.run(
             jnp.zeros(()), o_groups, mode=mode, prefetch=pf, stats=opt_stats,
             group_shardings=sh_o,
+            group_keys=[g.key for g in o_order],
         )
 
         new_home: dict = {}
@@ -1114,6 +1132,7 @@ def make_weight_streamed_prefill_step(
         ex.run(
             jnp.zeros(()), groups, mode=mode,
             prefetch=pf, stats=stats, group_shardings=sh_fwd,
+            group_keys=[g.key for g in plan.groups],
         )
         logits, caches = box["logits"], concat0(tuple(box["slices"]))
         box.clear()  # don't retain the per-group cache slices between calls
@@ -1248,10 +1267,16 @@ def make_weight_streamed_decode_step(
         live = 0
         for g in gs:
             tree = residency.lookup(g.key) if residency is not None else None
+            if residency is not None and getattr(residency, "sanitize", False):
+                residency.sanitize_home(
+                    g.key, home["groups"][g.key], hit=tree is not None
+                )
             if tree is None:
                 tree = home["groups"][g.key]
             sh = sh_all[g.index] if sh_all is not None else None
-            fut = engine.submit_group(g.index, tree, device_shardings=sh)
+            fut = engine.submit_group(
+                g.index, tree, device_shardings=sh, key=g.key
+            )
             if st is not None:
                 st.n_transfers += 1
                 st.n_groups += 1
@@ -1348,6 +1373,7 @@ def make_weight_streamed_decode_step(
         ex.run(
             jnp.zeros(()), groups, mode=mode,
             prefetch=pf, stats=stats, group_shardings=sh_prog,
+            group_keys=[g.key for g in prog],
         )
         logits, new_caches = box["logits"], concat0(tuple(box["new_slices"]))
         # a serving session calls this every step: dropping the old/new

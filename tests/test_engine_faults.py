@@ -10,6 +10,11 @@ state across runs — including failed ones.
 
 Every test body runs under a watchdog (daemon thread + join timeout), so
 a deadlock fails the test instead of hanging the suite.
+
+The whole module runs twice: once plain and once under ``REPRO_SANITIZE=1``
+(the runtime hazard sanitizer), proving that fault injection, retries, and
+restart recovery raise zero hazard reports — the chaos paths are
+happens-before clean, not just bitwise-correct.
 """
 import threading
 
@@ -24,6 +29,15 @@ from repro.core.refspec import AUTO, PrefetchSpec
 from repro.core.spillstore import SpillStore
 
 TIMEOUT_S = 60.0
+
+
+@pytest.fixture(autouse=True, params=["plain", "sanitized"])
+def sanitize_mode(request, monkeypatch):
+    if request.param == "sanitized":
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+    else:
+        monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    return request.param
 
 
 def run_with_timeout(fn, timeout_s: float = TIMEOUT_S):

@@ -483,11 +483,20 @@ def _ws_driver(tmp_path, *, steps=6, every=2, fail_at=None):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("sanitize", [False, True], ids=["plain", "sanitized"])
 @pytest.mark.parametrize("phase", ["forward_fetch", "d2h_drain", "ckpt_commit"])
-def test_chaos_phase_kill_recovers_bitwise(tmp_path, monkeypatch, phase):
+def test_chaos_phase_kill_recovers_bitwise(tmp_path, monkeypatch, phase,
+                                           sanitize):
     """Kill a disk-homed streamed train mid-step at a specific pipeline
     phase; the restarted run's loss series must be bitwise-equal to the
-    unfailed reference."""
+    unfailed reference.
+
+    The sanitized variant reruns the same kills under ``REPRO_SANITIZE=1``:
+    a kill mid-drain leaves D2H tickets pending, and the restart path must
+    discard them before re-fetching the same groups — a hazard report here
+    means recovery re-fetched through an in-flight writeback."""
+    if sanitize:
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
     ref = _ws_driver(tmp_path / "ref")
     ref.run()
     ref_losses = {h["step"]: h["loss"] for h in ref.history}
@@ -550,6 +559,9 @@ def test_chaos_phase_kill_recovers_bitwise(tmp_path, monkeypatch, phase):
 _ENV = {
     "PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
     "HOME": "/root",
+    # the re-mesh resumes run fully sanitized: kill + reshard + replay must
+    # produce zero transfer-hazard reports, not just bitwise losses
+    "REPRO_SANITIZE": "1",
 }
 
 

@@ -1,0 +1,325 @@
+"""Static schedule verifier + transfer-hazard sanitizer (ISSUE 9 tentpole).
+
+Pins the verification contract from both sides:
+  * zero false positives — every schedule the runtime actually constructs
+    analyzes clean (train F/B/O, serve prefill/decode, KV paging, MoE
+    expert streaming), and the closed-form ``distance + 2`` window model
+    is exact on singleton-unit layouts and an upper bound everywhere;
+  * seeded hazards are caught with actionable reports — a budget overrun
+    names the phase and group, an in-flight staging reuse raises from the
+    engine's free-list pop, a stale-residency RAW raises on the cache hit
+    that would serve pre-rebind weights, and a non-draining pager trips
+    the KV RAW rule.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import schedcheck as sc
+from repro.core.engine import EngineConfig, TransferEngine
+from repro.core.residency import ResidencyCache
+from repro.core.weightstream import WeightStreamPlan
+from repro.train import steps as st
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(get_smoke_config("smollm-360m"), n_layers=4)
+
+
+@pytest.fixture(scope="module")
+def plan(cfg):
+    return WeightStreamPlan(cfg, st.abstract_params(cfg), layers_per_group=2)
+
+
+def _moe_plan():
+    cfg = get_smoke_config("mixtral-8x7b")
+    return cfg, WeightStreamPlan(
+        cfg, st.abstract_params(cfg), layers_per_group=1, expert_stream=True
+    )
+
+
+# ---------------------------------------------------------------------------
+# zero false positives: real schedules analyze clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "recurrentgemma-2b"])
+@pytest.mark.parametrize("d", [1, 2, 4])
+def test_real_schedules_are_clean(arch, d):
+    cfg = get_smoke_config(arch)
+    plan = WeightStreamPlan(cfg, st.abstract_params(cfg))
+    cap = plan.residency_capacity_bytes()
+    rep = sc.analyze_train_schedule(
+        plan, distance=d, cache_capacity=cap, spill=True
+    )
+    assert rep.ok, rep
+    assert rep.n_spill_keys == 2 * len(plan.groups)
+    srep = sc.analyze_serve_schedule(plan, distance=d, cache_capacity=cap)
+    assert srep.ok, srep
+
+
+def test_moe_routed_schedule_is_clean():
+    cfg, plan = _moe_plan()
+    rep = sc.analyze_train_schedule(plan, distance=2, spill=True)
+    assert rep.ok, rep
+    srep = sc.analyze_serve_schedule(
+        plan,
+        distance=2,
+        kv=dict(slots=2, page_len=8, hot_pages=1, page_nbytes=512, max_len=32),
+    )
+    assert srep.ok, srep
+    # the routed fan-in is reported so the report is auditable
+    assert any("expert fan-in" in n for n in srep.notes)
+
+
+def test_budgeted_plan_analyzes_within_its_own_budget(cfg):
+    """The plan's budget cap (max_distance_for_budget) must be sound under
+    the exact model: stream at the cap, never overrun."""
+    free = WeightStreamPlan(cfg, st.abstract_params(cfg), layers_per_group=1)
+    budget_mb = free.peak_device_bytes(2) / 1e6
+    plan = WeightStreamPlan(
+        cfg, st.abstract_params(cfg), layers_per_group=1,
+        device_budget_mb=budget_mb,
+    )
+    d = plan.max_distance_for_budget(cached_bytes=0)
+    rep = sc.analyze_train_schedule(plan, distance=d, cached=False)
+    assert rep.ok, rep
+
+
+# ---------------------------------------------------------------------------
+# exactness: the d+2 fast path is tight on singleton-unit layouts and an
+# upper bound everywhere (the documented peak_device_bytes contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "recurrentgemma-2b"])
+@pytest.mark.parametrize("d", [1, 2, 4])
+def test_exact_peak_equals_fast_path_on_singleton_units(arch, d):
+    cfg = get_smoke_config(arch)
+    plan = WeightStreamPlan(cfg, st.abstract_params(cfg))
+    rep = sc.analyze_train_schedule(plan, distance=d, cached=False)
+    fwd = next(p for p in rep.phases if p.phase == "forward")
+    assert fwd.peak_bytes == plan.peak_device_bytes(d)
+
+
+@pytest.mark.parametrize("d", [1, 2, 4])
+def test_exact_peak_bounded_by_fast_path_on_moe(d):
+    _, plan = _moe_plan()
+    rep = sc.analyze_train_schedule(plan, distance=d, cached=False)
+    fwd = next(p for p in rep.phases if p.phase == "forward")
+    assert fwd.peak_bytes <= plan.peak_device_bytes(d)
+
+
+# ---------------------------------------------------------------------------
+# the cache simulator mirrors ResidencyCache decision-for-decision
+# ---------------------------------------------------------------------------
+
+
+def test_cache_sim_mirrors_residency_cache():
+    real = ResidencyCache(100)
+    sim = sc._CacheSim(100)
+    leaf = lambda n: {"w": np.zeros(n, np.uint8)}  # noqa: E731
+    ops = [
+        ("a", 40, False), ("b", 40, False), ("c", 30, False),  # evicts a
+        ("a", 40, True),                                       # evicts b
+        ("d", 70, False),                                      # refused: a pinned
+        ("c", 30, True),                                       # touch, widen pin
+        ("e", 30, False),                                      # refused
+    ]
+    for key, n, pin in ops:
+        assert real.put(key, leaf(n), n, pinned=pin) == sim.put(
+            key, n, pinned=pin
+        ), (key, n, pin)
+        assert real.resident_bytes == sim.resident_bytes
+    assert sorted(sim.keys()) == sorted(
+        k for k in ("a", "b", "c", "d", "e") if real.peek(k) is not None
+    )
+    real.unpin_all()
+    sim.unpin_all()
+    assert real.put("f", leaf(90), 90) == sim.put("f", 90)
+    assert real.resident_bytes == sim.resident_bytes == 90
+
+
+# ---------------------------------------------------------------------------
+# seeded hazard 1: budget overrun — named phase + group
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_budget_overrun_names_phase_and_group(cfg, plan):
+    budget = plan.peak_device_bytes(1) // 2
+    with pytest.raises(sc.ScheduleError) as ei:
+        sc.verify_schedule(
+            sc.analyze_train_schedule(
+                plan, distance=4, cached=False, budget_bytes=budget
+            )
+        )
+    rep = ei.value.report
+    v = next(v for v in rep.violations if v.rule == "budget")
+    assert v.phase in ("forward", "backward")
+    assert v.key in {g.key for g in plan.groups}
+    assert v.occupancy_bytes > v.budget_bytes == budget
+    assert "exceeds budget" in str(ei.value)
+
+
+def test_seeded_pin_hazards(cfg, plan):
+    rep = sc.analyze_train_schedule(
+        plan, distance=1, cache_capacity=10, pin_keys=["nope"]
+    )
+    assert any(v.rule == "pin-unknown-key" and v.key == "nope"
+               for v in rep.violations)
+    rep = sc.analyze_train_schedule(
+        plan, distance=1, cache_capacity=10,
+        pin_keys=[g.key for g in plan.groups],
+    )
+    assert any(v.rule == "pin-overcommit" for v in rep.violations)
+
+
+def test_spill_key_collision_detected(plan):
+    class Dup:
+        groups = plan.groups
+
+        @staticmethod
+        def spill_key(g):
+            return "wp/same"
+
+    rep = sc.ScheduleReport(
+        kind="train", name="dup", layout="uniform", distance=1,
+        budget_bytes=None, cache_capacity_bytes=None, cached=False,
+    )
+    sc._check_spill_keys(Dup, rep)
+    assert any(v.rule == "spill-key-collision" for v in rep.violations)
+
+
+# ---------------------------------------------------------------------------
+# seeded hazard 2: in-flight staging reuse — caught at the free-list pop
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_staging_reuse_raises(cfg, plan):
+    eng = TransferEngine(EngineConfig(sanitize=True))
+    try:
+        home = st.init_weight_streamed_params(jax.random.PRNGKey(0), cfg, plan)
+        g = plan.groups[0]
+        fut = eng.submit_group(g.index, home["groups"][g.key], key=g.key)
+        fut.wait()
+        # drive the real pool: a clean acquire/release/reacquire cycle
+        # passes, then seed the bug — the buffer lands on the free list
+        # WITHOUT being released (ticket still in flight) and the next
+        # pop refuses
+        sig, layout = next(iter(eng._layouts.items()))
+        staging = eng._acquire_staging(sig, layout)
+        eng._release_staging(sig, staging)
+        staging = eng._acquire_staging(sig, layout)  # clean pool reuse
+        eng._staging_free[sig].append(staging)
+        with pytest.raises(sc.HazardError, match="free list while"):
+            eng._acquire_staging(sig, layout)
+        assert eng.sanitizer.hazards == 1
+    finally:
+        eng.close()
+
+
+def test_sanitizer_staging_unit_semantics():
+    san = sc.HazardSanitizer()
+    san.on_staging_acquire(0xA, from_pool=False)  # fresh alloc: never flagged
+    san.on_staging_release(0xA)
+    san.on_staging_acquire(0xA, from_pool=True)  # clean reuse
+    with pytest.raises(sc.HazardError, match="reacquired"):
+        san.on_staging_acquire(0xA, from_pool=True)  # still marked
+    san.on_staging_release(0xA)
+    with pytest.raises(sc.HazardError, match="released twice"):
+        san.on_staging_release(0xA)
+
+
+# ---------------------------------------------------------------------------
+# seeded hazard 3: stale-residency RAW — hit after the home was rebound
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_stale_residency_raw_raises(cfg, plan):
+    home = st.init_weight_streamed_params(jax.random.PRNGKey(0), cfg, plan)
+    cache = ResidencyCache(None, sanitize=True)
+    g = plan.groups[1]
+    tree = plan.fetch_group(home, g, cache)  # miss: marks the home
+    cache.put(g.key, tree)
+    plan.fetch_group(home, g, cache)  # clean hit: same home
+    # the seeded bug: restart/reshard rebinds the host home without
+    # ResidencyCache.clear() — the next hit would serve stale weights
+    home["groups"][g.key] = jax.tree.map(
+        lambda x: np.array(x) + 1, home["groups"][g.key]
+    )
+    with pytest.raises(sc.HazardError, match=g.key):
+        plan.fetch_group(home, g, cache)
+
+
+def test_engine_raw_writeback_fetch_raises():
+    eng = TransferEngine(EngineConfig(sanitize=True))
+    try:
+        arr = jax.device_put(np.ones(64, np.float32))
+        eng.submit_writeback(1, {"w": arr}, key="g001")
+        with pytest.raises(sc.HazardError, match="g001"):
+            eng.submit_group(0, {"w": np.ones(64, np.float32)}, key="g001")
+        eng.discard_writebacks()  # drained: the same fetch is now legal
+        eng.submit_group(0, {"w": np.ones(64, np.float32)}, key="g001").wait()
+    finally:
+        eng.close()
+
+
+def test_static_raw_detected_without_drain():
+    """The analyzer's O-phase writeback hazard rule, driven directly."""
+    _, plan = _moe_plan()
+    rep = sc.ScheduleReport(
+        kind="train", name="x", layout=plan.layout, distance=1,
+        budget_bytes=None, cache_capacity_bytes=None, cached=False,
+    )
+    sim = sc._PhaseSim(rep, "optimizer", cache=None, budget_bytes=None)
+    g = plan.groups[0]
+    sim.submit(g, 8, g.key)
+    sim.writeback(g.key)
+    sim.submit(g, 8, g.key)  # re-fetch before the drain
+    assert any(v.rule == "raw-writeback" and v.key == g.key
+               for v in rep.violations)
+
+
+def test_kv_raw_detected_when_pager_skips_drain():
+    cfg = get_smoke_config("smollm-360m")
+    plan = WeightStreamPlan(cfg, st.abstract_params(cfg))
+    rep = sc.analyze_serve_schedule(
+        plan,
+        distance=1,
+        kv=dict(slots=1, page_len=4, hot_pages=1, page_nbytes=256, max_len=64),
+        flush_demotions=False,
+    )
+    assert any(v.rule == "kv-raw" and v.key.startswith("kv/")
+               for v in rep.violations), rep
+
+
+# ---------------------------------------------------------------------------
+# env plumbing + report rendering
+# ---------------------------------------------------------------------------
+
+
+def test_sanitize_enabled_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert sc.sanitize_enabled() is False
+    assert sc.sanitize_enabled(default=True) is True
+    for v, want in [("1", True), ("true", True), ("0", False),
+                    ("no", False), ("", False)]:
+        monkeypatch.setenv("REPRO_SANITIZE", v)
+        assert sc.sanitize_enabled() is want
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert EngineConfig().sanitize is True
+    assert ResidencyCache(None).sanitize is True
+
+
+def test_report_renders_violations(cfg, plan):
+    rep = sc.analyze_train_schedule(
+        plan, distance=4, cached=False, budget_bytes=1
+    )
+    text = str(rep)
+    assert "VIOLATIONS" in text and "schedule[train]" in text
+    clean = sc.analyze_train_schedule(plan, distance=1)
+    assert "OK:" in str(clean) and clean.peak_bytes > 0
