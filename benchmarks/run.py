@@ -21,6 +21,7 @@ SUITES = {
     "engine": ("benchmarks.engine_compare", "coalesced transfer engine vs seed per-leaf schedule"),
     "disk": ("benchmarks.disk_tier", "DiskHost three-level streaming (modeled disk link)"),
     "serve": ("benchmarks.serve_paged", "paged KV-cache serving vs per-step placement"),
+    "serve_slo": ("benchmarks.serve_slo", "SLO load-generator serving: goodput under SLO + COW prefix sharing A/B"),
     "shard": ("benchmarks.shard_stream", "sharding-aware coalescing vs per-leaf fallback (2-device mesh)"),
     "weights": ("benchmarks.weight_stream", "streamed model parameters under a device budget (modeled link)"),
     "recovery": ("benchmarks.recovery", "self-healing runtime: retry overhead, fault bitwise-equality, CRC recovery, restart latency"),
@@ -28,7 +29,7 @@ SUITES = {
 
 #: the suites driven purely by the deterministic LinkModel emulation —
 #: meaningful on a noisy CI runner, unlike the wall-clock studies
-SMOKE_SUITES = ["engine", "disk", "serve", "shard", "weights", "recovery"]
+SMOKE_SUITES = ["engine", "disk", "serve", "serve_slo", "shard", "weights", "recovery"]
 
 
 def main() -> int:

@@ -83,6 +83,11 @@ class StreamStats:
     #: submits that had to move bytes (always == unique_group_fetches; kept
     #: as its own counter so hit-rate reads don't conflate the two views)
     cache_misses: int = 0
+    #: pops satisfied by a same-step fetch of the same *content* key — the
+    #: copy-on-write prefix-sharing win: N requests whose prompts share a
+    #: page-aligned prefix cost ONE fetch (one ``n_groups`` entry) plus
+    #: N-1 shared hits, so ``h2d_requests == n_groups`` stays exact
+    shared_hits: int = 0
     #: sum of per-group device counts over *fetched* groups only — the
     #: denominator that keeps the one-request-per-(device, group) coalescing
     #: invariant checkable when resident groups pass through at zero requests
@@ -163,6 +168,7 @@ class StreamStats:
                 "unique_group_fetches": self.unique_group_fetches,
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
+                "shared_hits": self.shared_hits,
             },
             "d2h": {
                 "requests": self.d2h_requests,

@@ -27,10 +27,25 @@ bitwise-equal by construction (pinned in ``tests/test_serve.py``); the
 device only ever *retains* the hot window (``device_resident_bytes``),
 which is how host/disk-homed caches decode contexts larger than the device
 budget.
+
+**Copy-on-write prefix sharing.**  A KV page strictly behind the write
+position is immutable, and its content is a pure causal function of the
+prompt prefix that produced it — so requests whose prompts share a
+page-aligned prefix (the shared-system-prompt shape) can alias one cold
+copy.  ``admit(..., prefix_keys=...)`` attaches refcounted
+:class:`SharedPage` records keyed by *content digest* instead of by
+``rid``: the first demotion writes the one host/spill chunk, later
+demotions of aliasing records just drop their device reference, and the
+per-step fetch is deduplicated by content key in :class:`PageStream`
+(``stats.shared_hits``) — one fetch and one spill chunk per shared page
+for the whole batch.  ``retire`` drops the chunk only at the last
+reference.  Sharing never changes what the decode step reads, so every
+schedule stays bitwise-equal to the unshared baseline.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import OrderedDict
 from typing import Any, Optional, Union
@@ -50,10 +65,12 @@ __all__ = [
     "PageRecord",
     "PageTable",
     "PageStream",
+    "SharedPage",
     "KVPager",
     "assemble_view",
     "page_template",
     "paged_cache_supported",
+    "shared_prefix_keys",
 ]
 
 Pytree = Any
@@ -122,6 +139,29 @@ def assemble_view(view) -> Pytree:
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=_batch_axis(xs[0])), *slots)
 
 
+def shared_prefix_keys(prompt, page_len: int, shared_len: Optional[int] = None) -> list[str]:
+    """Content-digest fetch/spill keys for the COW-shareable pages of a
+    prompt: one key per page *fully covered* by the (shared prefix of the)
+    prompt.
+
+    KV content at position ``t`` is a pure causal function of tokens
+    ``[0, t]``, so page ``p`` (tokens ``[pL, (p+1)L)``) is determined by
+    ``prompt[:(p+1)L]`` — that prefix is what gets hashed.  Two requests
+    produce the same key for page ``p`` iff their prompts agree on the
+    first ``(p+1)*page_len`` tokens, which is exactly when their KV pages
+    are bitwise-identical.  ``shared_len`` optionally caps keying to a
+    known shared-prefix length (e.g. the system prompt) so private tails
+    never enter the shared registry.
+    """
+    toks = np.asarray(prompt, np.int32).reshape(-1)
+    n = len(toks) if shared_len is None else min(len(toks), int(shared_len))
+    keys = []
+    for p in range(n // page_len):
+        digest = hashlib.sha1(toks[: (p + 1) * page_len].tobytes()).hexdigest()[:20]
+        keys.append(f"kvshared/L{page_len}/{digest}")
+    return keys
+
+
 # ---------------------------------------------------------------------------
 # configuration / page table
 # ---------------------------------------------------------------------------
@@ -158,13 +198,39 @@ _DEVICE, _COLD, _WB, _ZERO = "device", "cold", "wb", "zero"
 
 
 @dataclasses.dataclass
+class SharedPage:
+    """One content-addressed cold page, aliased copy-on-write by every
+    request whose prompt contains the same page-aligned prefix.
+
+    The cold home copy (host tree / spill chunk) lives *here*, keyed by
+    content digest instead of by ``rid``; per-request :class:`PageRecord`
+    entries reference it and the last ``retire`` drops the chunk.  Pages
+    behind the write position are never mutated, so aliasing is safe by
+    construction — a decode step reads identical bytes whether the page
+    came from its own spill chunk or a shared one.
+    """
+
+    key: str
+    refs: int = 0
+    host: Optional[Pytree] = None
+    #: a writeback for this content is already in the engine's D2H queue:
+    #: later demotions of aliasing records drop their device copy instead
+    #: of queueing a duplicate writeback
+    wb_pending: bool = False
+
+
+@dataclasses.dataclass
 class PageRecord:
     """One page's residency: device-resident pytree, cold home pytree
-    (numpy / spill-store memmaps), in-flight writeback, or still-zero."""
+    (numpy / spill-store memmaps), in-flight writeback, or still-zero.
+    ``shared`` aliases the cold home to a refcounted content-keyed
+    :class:`SharedPage` (COW prefix sharing); the cold copy then lives on
+    the shared record and ``host`` stays ``None``."""
 
     state: str = _ZERO
     dev: Optional[Pytree] = None
     host: Optional[Pytree] = None
+    shared: Optional[SharedPage] = None
 
 
 @dataclasses.dataclass
@@ -186,18 +252,24 @@ class PageTable:
 class PageStream:
     """Pipelined cold-page fetcher over a :class:`TransferEngine`.
 
-    ``push`` enqueues a ``(rid, page)`` group; at most ``window(rid)``
-    groups per request are submitted to the engine at once (the rest stay
-    pending).  ``pop`` waits the group's future, tops the windows back up,
-    and returns the staged device tree.  Under ``distance="auto"`` each
-    request's :class:`AdaptiveDistance` controller observes the request's
-    *per-step* aggregate stall (``step_done``), not per-group waits: a
-    shrink that re-introduces a stall is then stalled on the very next
-    observation, which is what arms the controller's sticky floor — per
-    group, a clean in-window pop always lands between the shrink and the
-    stall and the window oscillates forever.  Keys pushed speculatively
-    for a step that never consumes them (the request finished or was
-    evicted) are dropped by ``sync`` and counted.
+    Keys are the engine transfer keys (strings): per-request
+    ``kv/{rid}/p{page}`` for private pages, content digests
+    (``kvshared/...``) for COW-shared prefix pages.  ``push`` enqueues a
+    key's group charged to an *owning* request (the first pusher; ``sync``
+    re-assigns owners as requests retire); at most ``window(rid)`` groups
+    per owner are submitted to the engine at once (the rest stay pending).
+    ``pop`` waits the group's future, tops the windows back up, and returns
+    the staged device tree; within one step, later pops of the *same* key
+    (several requests aliasing one shared page) return the staged tree for
+    free and count a ``stats.shared_hits`` instead of a fetch.  Under
+    ``distance="auto"`` each request's :class:`AdaptiveDistance` controller
+    observes the request's *per-step* aggregate stall (``step_done``), not
+    per-group waits: a shrink that re-introduces a stall is then stalled on
+    the very next observation, which is what arms the controller's sticky
+    floor — per group, a clean in-window pop always lands between the
+    shrink and the stall and the window oscillates forever.  Keys pushed
+    speculatively for a step that never consumes them (the request finished
+    or was evicted) are dropped by ``sync`` and counted.
     """
 
     def __init__(
@@ -226,8 +298,14 @@ class PageStream:
             shrink_after=shrink_after,
         )
         self._controllers: dict[int, AdaptiveDistance] = {}
-        self._pending: "OrderedDict[tuple, Pytree]" = OrderedDict()
-        self._inflight: "OrderedDict[tuple, Any]" = OrderedDict()
+        self._pending: "OrderedDict[str, Pytree]" = OrderedDict()
+        self._inflight: "OrderedDict[str, Any]" = OrderedDict()
+        #: window accounting: each queued/in-flight key is charged to ONE
+        #: request — the first pusher; ``sync`` re-assigns as owners retire
+        self._owner: dict[str, int] = {}
+        #: per-step memo of popped device trees: N sharers of one content
+        #: key pay one fetch per step (cleared by ``step_done``)
+        self._staged: dict[str, Pytree] = {}
         self._seq = 0
         #: per-request stall accumulated since the last ``step_done``
         self._step_waits: dict[int, float] = {}
@@ -243,12 +321,11 @@ class PageStream:
         return ctl.distance
 
     def _inflight_of(self, rid: int) -> int:
-        return sum(1 for (r, _p) in self._inflight if r == rid)
+        return sum(1 for k in self._inflight if self._owner.get(k) == rid)
 
-    def _submit(self, key: tuple, tree: Pytree):
+    def _submit(self, key: str, tree: Pytree):
         fut = self._engine.submit_group(
-            self._seq, tree, device_shardings=self._shardings,
-            key=f"kv/{key[0]}/p{key[1]:05d}",
+            self._seq, tree, device_shardings=self._shardings, key=key
         )
         self._seq += 1
         self._inflight[key] = fut
@@ -256,16 +333,23 @@ class PageStream:
 
     def _top_up(self) -> None:
         for key in list(self._pending):
-            if self._inflight_of(key[0]) < self.window(key[0]):
+            rid = self._owner.get(key)
+            if self._inflight_of(rid) < self.window(rid):
                 self._submit(key, self._pending.pop(key))
 
-    def push(self, key: tuple, tree: Pytree) -> None:
+    def push(self, rid: int, key: str, tree: Pytree) -> None:
         if key in self._pending or key in self._inflight:
             return
+        self._owner[key] = rid
         self._pending[key] = tree
         self._top_up()
 
-    def pop(self, key: tuple, tree: Pytree, stats: StreamStats) -> Pytree:
+    def pop(self, rid: int, key: str, tree: Pytree, stats: StreamStats) -> Pytree:
+        staged = self._staged.get(key)
+        if staged is not None:
+            # an aliasing request already fetched this content this step
+            stats.shared_hits += 1
+            return staged
         fut = self._inflight.pop(key, None)
         if fut is None:
             # never prefetched (cold start / late table change): fetch now —
@@ -273,8 +357,8 @@ class PageStream:
             self._pending.pop(key, None)
             fut = self._submit(key, tree)
             self._inflight.pop(key)
+        self._owner.pop(key, None)
         w = fut.wait()
-        rid = key[0]
         stats.n_transfers += 1
         stats.n_groups += 1
         stats.h2d_requests += fut.n_requests
@@ -297,12 +381,16 @@ class PageStream:
             self._step_waits[rid] = self._step_waits.get(rid, 0.0) + w
         stats.distance_trace.append(self.window(rid))
         self._top_up()
-        return fut.group()
+        dev = fut.group()
+        self._staged[key] = dev
+        return dev
 
     def step_done(self) -> None:
         """Feed each request's controller its aggregate stall for the step
         just consumed (call after the step's pops, before the next
-        ``push`` wave so the adapted window applies immediately)."""
+        ``push`` wave so the adapted window applies immediately), and
+        release the step's staged shared trees."""
+        self._staged.clear()
         if not self._auto:
             return
         for rid, w in self._step_waits.items():
@@ -311,16 +399,23 @@ class PageStream:
         self._step_waits.clear()
         self._top_up()
 
-    def sync(self, valid: set) -> None:
-        """Drop queued/in-flight keys outside ``valid`` (stale speculation).
+    def sync(self, valid: dict) -> None:
+        """Drop queued/in-flight keys outside ``valid`` (stale speculation)
+        and re-charge surviving keys to their current owners (``valid``
+        maps key -> owning rid; a shared key outlives any one sharer).
         In-flight futures complete on the worker regardless; only the
         references are released."""
         for key in [k for k in self._pending if k not in valid]:
             del self._pending[key]
+            self._owner.pop(key, None)
             self.stale_drops += 1
         for key in [k for k in self._inflight if k not in valid]:
             del self._inflight[key]
+            self._owner.pop(key, None)
             self.stale_drops += 1
+        for key, rid in valid.items():
+            if key in self._pending or key in self._inflight:
+                self._owner[key] = rid
 
     def forget(self, rid: int) -> None:
         """Release a finished request's controller state (the session
@@ -420,6 +515,12 @@ class KVPager:
         self._pending_demotions: list[tuple[PageTable, int]] = []
         self.demoted_groups = 0
         self.peak_resident_bytes = 0
+        #: content digest -> refcounted shared cold page (COW prefix sharing)
+        self._shared: dict[str, SharedPage] = {}
+        #: demotions satisfied by an existing shared cold copy — the COW
+        #: spill win: D2H writebacks (and spill chunks) NOT paid because an
+        #: aliasing request already homed the same content
+        self.shared_skipped_writebacks = 0
 
     # -- jitted page plumbing ------------------------------------------------
     def _split_fn(self, cache_slot: Pytree) -> tuple:
@@ -457,15 +558,52 @@ class KVPager:
     def _page_key(self, rid: int, p: int) -> str:
         return f"kv/{rid}/p{p:05d}"
 
-    def admit(self, rid: int, slot: int, cache_slot: Pytree, n_tokens: int) -> PageTable:
+    def _fetch_key(self, table: PageTable, p: int) -> str:
+        """Engine transfer/spill key of a page: the content digest for a
+        COW-shared page (one key per content for the whole batch), the
+        per-request key otherwise."""
+        rec = table.records[p]
+        if rec.shared is not None:
+            return rec.shared.key
+        return self._page_key(table.rid, p)
+
+    @staticmethod
+    def _cold_home(rec: PageRecord) -> Optional[Pytree]:
+        """A cold page's home tree: the shared record's for aliased pages."""
+        return rec.shared.host if rec.shared is not None else rec.host
+
+    def admit(
+        self,
+        rid: int,
+        slot: int,
+        cache_slot: Pytree,
+        n_tokens: int,
+        prefix_keys: Optional[list[str]] = None,
+    ) -> PageTable:
         """Install a freshly prefilled per-slot cache as a page table.
-        Pages behind the hot window are demoted (caller flushes)."""
+        Pages behind the hot window are demoted (caller flushes).
+
+        ``prefix_keys`` (from :func:`shared_prefix_keys`): content keys for
+        the leading pages fully covered by the prompt's shared prefix —
+        those records alias the refcounted shared registry so the batch
+        pays one spill chunk and one fetch per shared page.  Only pages
+        strictly behind the write page are shareable (the current page is
+        mutated by decode)."""
         pages = self._split(cache_slot)
         cur = n_tokens // self.config.page_len
         records = [
             PageRecord(_DEVICE, dev=pg) if p <= cur else PageRecord(_ZERO)
             for p, pg in enumerate(pages)
         ]
+        if prefix_keys and self.kind != mk.DEVICE:
+            for p, key in enumerate(prefix_keys):
+                if p >= cur:
+                    break
+                sp = self._shared.get(key)
+                if sp is None:
+                    sp = self._shared[key] = SharedPage(key=key)
+                sp.refs += 1
+                records[p].shared = sp
         table = PageTable(rid=rid, slot=slot, pos=n_tokens, records=records)
         self.tables[rid] = table
         self._by_slot[slot] = table
@@ -476,7 +614,18 @@ class KVPager:
 
     def _demote(self, table: PageTable, p: int) -> None:
         rec = table.records[p]
-        if rec.host is not None:
+        sp = rec.shared
+        if sp is not None:
+            if sp.host is not None or sp.wb_pending:
+                # an aliasing request already homed (or is homing) this
+                # content: dropping the device reference IS the demotion —
+                # the COW win: one D2H + one spill chunk per shared page
+                # for the whole batch
+                rec.dev = None
+                rec.state = _COLD
+                self.shared_skipped_writebacks += 1
+                return
+        elif rec.host is not None:
             # a promoted page still carries its cold home copy, and pages
             # behind the write head are never mutated — dropping the device
             # reference IS the demotion (no redundant D2H / store rewrite)
@@ -484,9 +633,11 @@ class KVPager:
             rec.state = _COLD
             return
         self.engine.submit_writeback(
-            self._wb_seq, rec.dev, key=self._page_key(table.rid, p)
+            self._wb_seq, rec.dev, key=self._fetch_key(table, p)
         )
         self._wb_seq += 1
+        if sp is not None:
+            sp.wb_pending = True
         self._pending_demotions.append((table, p))
         rec.dev = None
         rec.state = _WB
@@ -505,33 +656,41 @@ class KVPager:
             stats.n_transfers += 1
             stats.d2h_requests += len(jax.tree.leaves(host))
             stats.bytes_d2h += nb
+            rec = table.records[p]
+            key = self._fetch_key(table, p)
             if self.kind == mk.DISK_HOST:
-                key = self._page_key(table.rid, p)
                 self.store.put(key, host)
                 host = self.store.get(key)
-            rec = table.records[p]
-            rec.host = host
+            if rec.shared is not None:
+                rec.shared.host = host
+                rec.shared.wb_pending = False
+            else:
+                rec.host = host
             rec.state = _COLD
             self.demoted_groups += 1
 
-    def cold_keys(self) -> "OrderedDict[tuple, Pytree]":
+    def cold_keys(self) -> "OrderedDict[str, tuple]":
         """Every cold page of every active request, slot-major then page
-        order (the stream's submission = consumption order)."""
-        out: "OrderedDict[tuple, Pytree]" = OrderedDict()
+        order (the stream's submission = consumption order).  Maps the
+        engine fetch key -> ``(owning rid, home tree)``; a COW-shared
+        content key appears ONCE, owned by the first slot consuming it."""
+        out: "OrderedDict[str, tuple]" = OrderedDict()
         for slot in sorted(self._by_slot):
             table = self._by_slot[slot]
             for p, rec in enumerate(table.records):
                 if rec.state == _COLD:
-                    out[(table.rid, p)] = rec.host
+                    key = self._fetch_key(table, p)
+                    if key not in out:
+                        out[key] = (table.rid, self._cold_home(rec))
         return out
 
     def prefetch(self) -> None:
         """Speculatively push the current cold set (deduped; stale keys
         from retired/evicted requests are dropped)."""
         cold = self.cold_keys()
-        self.stream.sync(set(cold))
-        for key, tree in cold.items():
-            self.stream.push(key, tree)
+        self.stream.sync({key: rid for key, (rid, _t) in cold.items()})
+        for key, (rid, tree) in cold.items():
+            self.stream.push(rid, key, tree)
 
     def view(self, stats: StreamStats) -> tuple:
         """This step's per-slot page view: hot pages by reference, cold
@@ -549,11 +708,18 @@ class KVPager:
                 elif rec.state == _ZERO:
                     pages.append(self._zero_page)
                 else:
-                    if rec.state == _WB:
-                        # demoted but never flushed — should not happen in
-                        # the serve loop; flush so the host bytes exist
+                    if rec.state == _WB or (
+                        rec.shared is not None and rec.shared.host is None
+                    ):
+                        # demoted but never flushed (or aliasing a shared
+                        # writeback still in the D2H queue) — should not
+                        # happen in the serve loop; flush so the host
+                        # bytes exist
                         self.flush_demotions(stats)
-                    dev = self.stream.pop((table.rid, p), rec.host, stats)
+                    dev = self.stream.pop(
+                        table.rid, self._fetch_key(table, p),
+                        self._cold_home(rec), stats,
+                    )
                     if self.kind == mk.DEVICE or p >= self._hot_floor(table):
                         # home tier is the device (or the page re-entered
                         # the hot window after a readmit): promote
@@ -629,6 +795,18 @@ class KVPager:
         table = self.tables.pop(rid)
         if table.slot is not None:
             self._by_slot.pop(table.slot, None)
+        for rec in table.records:
+            sp = rec.shared
+            if sp is None:
+                continue
+            # drop the shared chunk only at the LAST reference: aliasing
+            # requests still decode against it
+            sp.refs -= 1
+            if sp.refs <= 0:
+                self._shared.pop(sp.key, None)
+                if self.kind == mk.DISK_HOST and self.store is not None:
+                    if sp.key in self.store:
+                        self.store.delete(sp.key)
         if self.kind == mk.DISK_HOST and self.store is not None:
             for p in range(self.n_pages):
                 key = self._page_key(rid, p)
@@ -655,3 +833,12 @@ class KVPager:
         """Bytes of the full dense cache across all slots (what an unpaged
         device-resident run retains)."""
         return self.slots * self.n_pages * self.page_nbytes
+
+    def shared_pages(self) -> int:
+        """Live entries in the COW shared-page registry."""
+        return len(self._shared)
+
+    def shared_refs(self) -> int:
+        """Total references into the shared registry (>= shared_pages when
+        any prefix is actually aliased by more than one request)."""
+        return sum(sp.refs for sp in self._shared.values())

@@ -42,6 +42,7 @@ from repro.core.kvpager import (
     KVPagerConfig,
     page_template,
     paged_cache_supported,
+    shared_prefix_keys,
 )
 from repro.core.refspec import AUTO
 from repro.core.residency import ResidencyCache
@@ -156,6 +157,7 @@ class ServeSession:
         param_cache_mb: Optional[float] = None,
         expert_stream: bool = False,
         route_experts: bool = True,
+        prefix_sharing: bool = True,
     ) -> None:
         self.cfg = cfg
         self.mesh = mesh
@@ -463,6 +465,16 @@ class ServeSession:
         self._slot_of: dict[int, int] = {}  # rid -> slot
         self._next_rid = 0
         self.n_steps = 0
+        #: COW prefix sharing: admit pages under content-digest keys so
+        #: requests with a common page-aligned prompt prefix alias one cold
+        #: copy (no-op for device-resident caches — nothing is ever cold)
+        self._prefix_sharing = prefix_sharing and self._kind != mk.DEVICE
+        #: requests rejected at submit (prompt + gen > max_len) — under
+        #: open-loop load an oversized request must not kill the session
+        self.rejected = 0
+        #: readmits that found the batch full, drained (ahead of new
+        #: admissions) by the next admission cycle
+        self._readmit_queue: "deque[int]" = deque()
         #: per-step compute-blocked transfer wait (steady-state metric)
         self.step_waits: list = []
         #: per-step UNIQUE weight-group fetches (H2D link traffic, not
@@ -475,19 +487,41 @@ class ServeSession:
         return (self.slots, cb) if cb else (self.slots,)
 
     # -- request lifecycle ---------------------------------------------------
-    def submit(self, prompt, gen: int) -> int:
+    def submit(self, prompt, gen: int) -> Optional[int]:
         """Queue a request; returns its id.  Admitted at the next step (or
-        immediately via :meth:`admit_pending`)."""
+        immediately via :meth:`admit_pending`).
+
+        A request that cannot fit (``prompt + gen > max_len``) is rejected
+        gracefully — ``None`` is returned and ``self.rejected`` counts it —
+        instead of raising mid-run (under open-loop load one oversized
+        prompt must not kill the whole session)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) + gen > self.max_len:
-            raise ValueError(
-                f"prompt {len(prompt)} + gen {gen} exceeds max_len {self.max_len}"
-            )
+            self.rejected += 1
+            return None
         rid = self._next_rid
         self._next_rid += 1
         self.requests[rid] = Request(rid=rid, prompt=prompt, gen=gen)
         self.queue.append(rid)
         return rid
+
+    def _bucket_len(self, s: int) -> int:
+        """Power-of-two prompt-length bucket (min 8, capped at ``max_len``):
+        prefill compiles once per bucket instead of once per distinct
+        prompt length.  Bucketing is bitwise-invisible — the pad tail's
+        garbage K/V lands beyond the write position (masked by every
+        decode step's causal ``pos`` mask until overwritten, or dropped
+        with the ``_ZERO`` pages) and the head reads the last *real*
+        position via ``last_pos``."""
+        b = 8
+        while b < s:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _prefix_keys(self, req: Request) -> Optional[list]:
+        if not self._prefix_sharing:
+            return None
+        return shared_prefix_keys(req.prompt, self.pager.config.page_len)
 
     def _free_slots(self) -> list:
         return [s for s in range(self.slots) if s not in self.pager._by_slot]
@@ -498,19 +532,34 @@ class ServeSession:
         admission, before any decode step)."""
         emitted = {}
         for slot in self._free_slots():
+            # queued readmits resume first: they were promised a slot
+            # before any not-yet-admitted submission existed
+            if self._readmit_queue:
+                rid = self._readmit_queue.popleft()
+                self.pager.readmit(rid, slot)
+                self._slot_of[rid] = slot
+                continue
             if not self.queue:
                 break
             rid = self.queue.popleft()
             req = self.requests[rid]
+            s = len(req.prompt)
+            width = self._bucket_len(s)
+            padded = np.zeros((width,), np.int32)
+            padded[:s] = req.prompt
             logits, cache = self._prefill(
-                self.params, _prompt_batch(self.cfg, req.prompt[None, :])
+                self.params,
+                _prompt_batch(self.cfg, padded[None, :]),
+                jnp.asarray(s - 1, jnp.int32),
             )
             tok = np.asarray(self._argmax(logits))[0]  # scalar / (n_codebooks,)
             req.next_token = tok
             req.emitted.append(_emit(self.cfg, tok))
             emitted[rid] = req.emitted[-1]
             self._slot_of[rid] = slot
-            self.pager.admit(rid, slot, cache, len(req.prompt))
+            self.pager.admit(
+                rid, slot, cache, s, prefix_keys=self._prefix_keys(req)
+            )
             if req.done:  # gen == 1: nothing left to decode
                 self._retire(rid)
         self.pager.flush_demotions(self.stats)
@@ -526,15 +575,27 @@ class ServeSession:
         self.pager.evict(rid, self.stats)
         self._slot_of.pop(rid, None)
 
-    def readmit(self, rid: int) -> None:
+    def readmit(self, rid: int) -> bool:
         """Resume an evicted request in a free slot (pages stream back in
-        cold over the following steps)."""
+        cold over the following steps).  When the batch is full the
+        readmit is QUEUED for the next admission cycle — ahead of new
+        submissions — instead of crashing the session mid-run; returns
+        True when a slot was taken now, False when queued."""
+        table = self.pager.tables.get(rid)
+        if table is None:
+            raise KeyError(f"unknown request {rid}")
+        if table.slot is not None:
+            raise ValueError(f"request {rid} is not evicted")
+        if rid in self._readmit_queue:
+            return False
         free = self._free_slots()
         if not free:
-            raise RuntimeError("no free slot to readmit into")
+            self._readmit_queue.append(rid)
+            return False
         slot = free[0]
         self.pager.readmit(rid, slot)
         self._slot_of[rid] = slot
+        return True
 
     @property
     def active(self) -> dict:
@@ -542,7 +603,13 @@ class ServeSession:
         return dict(self._slot_of)
 
     def pending_work(self) -> bool:
-        return bool(self.queue or self._slot_of)
+        return bool(self.queue or self._slot_of or self._readmit_queue)
+
+    def prefill_compiles(self) -> Optional[int]:
+        """Compiled prefill variant count (bucketed prompt widths); None
+        for the streamed-weight prefill (a composite, not one jit)."""
+        cache_size = getattr(self._prefill, "_cache_size", None)
+        return cache_size() if cache_size is not None else None
 
     # -- the decode loop -----------------------------------------------------
     def warmup(self) -> None:
@@ -567,7 +634,7 @@ class ServeSession:
         """One decode step over every active slot.  Returns ``{rid: token}``
         for tokens emitted this step (including first tokens of requests
         admitted at the end of the step)."""
-        if not self._slot_of and (self.queue):
+        if not self._slot_of and (self.queue or self._readmit_queue):
             return self.admit_pending()
         wait0 = self.stats.transfer_wait_s
         fetch0 = self.param_stats.unique_group_fetches
@@ -991,9 +1058,14 @@ def serve(
     param_cache_mb: Optional[float] = None,
     expert_stream: bool = False,
     route_experts: bool = True,
+    prefix_sharing: bool = True,
+    shared_prefix_len: int = 0,
 ):
     """Serve ``n_requests`` greedy-decode requests (default: one per batch
     slot) of ``prompt_len`` prompt tokens and ``gen`` generated tokens.
+    ``shared_prefix_len`` makes the first that many prompt tokens identical
+    across requests (the shared-system-prompt traffic shape);
+    ``prefix_sharing`` lets the pager alias those pages copy-on-write.
 
     ``kv_page_len > 0`` routes decode through the paged
     :class:`ServeSession`; ``kv_page_len=0`` runs the unpaged reference
@@ -1034,10 +1106,13 @@ def serve(
         )
 
     key_t = jax.random.PRNGKey(seed + 1)
-    prompts = np.asarray(
+    prompts = np.array(
         jax.random.randint(key_t, (n_requests, prompt_len), 1, cfg.vocab_size),
         np.int32,
     )
+    if shared_prefix_len:
+        shared = min(shared_prefix_len, prompt_len)
+        prompts[:, :shared] = prompts[0, :shared]
     with ServeSession(
         cfg,
         mesh,
@@ -1058,6 +1133,7 @@ def serve(
         param_cache_mb=param_cache_mb,
         expert_stream=expert_stream,
         route_experts=route_experts,
+        prefix_sharing=prefix_sharing,
     ) as session:
         rids = [session.submit(prompts[i], gen) for i in range(n_requests)]
         if warmup:
@@ -1087,6 +1163,12 @@ def serve(
             "paged": True,
             "n_steps": session.n_steps,
             "stale_drops": session.pager.stream.stale_drops,
+            "rejected": session.rejected,
+            "prefill_compiles": session.prefill_compiles(),
+            "shared_hits": stats.shared_hits,
+            "shared_skipped_writebacks": (
+                session.pager.shared_skipped_writebacks
+            ),
             "demoted_groups": session.pager.demoted_groups,
             "peak_resident_bytes": session.pager.peak_resident_bytes,
             "total_cache_bytes": session.pager.total_cache_bytes(),
@@ -1144,6 +1226,38 @@ def main() -> int:
                     "--param-kind)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable copy-on-write sharing of page-aligned "
+                    "prompt prefixes (the A/B baseline; sharing is "
+                    "bitwise-invisible either way)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="make the first N prompt tokens identical across "
+                    "requests (the shared-system-prompt traffic shape)")
+    # -- open-loop load generator + SLO scheduler ---------------------------
+    ap.add_argument("--loadgen", action="store_true",
+                    help="serve an open-loop Poisson trace through the SLO "
+                    "scheduler instead of the fixed request list")
+    ap.add_argument("--lg-seed", type=int, default=0)
+    ap.add_argument("--lg-phases", default="4:2,1:8,4:2",
+                    help="arrival phases as 'duration_s:rate_rps,...' "
+                    "(bursty by default)")
+    ap.add_argument("--lg-prompt-lens", default="8,24,48",
+                    help="prompt-length mixture support (comma ints)")
+    ap.add_argument("--lg-gen-lens", default="4,8,16",
+                    help="output-length mixture support (comma ints)")
+    ap.add_argument("--lg-shared-frac", type=float, default=1.0,
+                    help="fraction of offered requests starting with the "
+                    "shared system prompt (--shared-prefix-len)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=500.0,
+                    help="time-to-first-token SLO target")
+    ap.add_argument("--slo-tpot-ms", type=float, default=100.0,
+                    help="per-output-token SLO target")
+    ap.add_argument("--max-queue", type=int, default=32,
+                    help="admission queue bound; arrivals beyond it are "
+                    "shed (rejected_overload)")
+    ap.add_argument("--virtual-step-ms", type=float, default=10.0,
+                    help="virtual clock advance per decode step (0 = wall "
+                    "clock)")
     args = ap.parse_args()
 
     if args.verify_schedule and args.param_kind == "device":
@@ -1208,6 +1322,92 @@ def main() -> int:
         )
         print(report)
         sc.verify_schedule(report)
+    if args.loadgen:
+        if args.kv_page_len <= 0:
+            ap.error("--loadgen drives the paged ServeSession; "
+                     "use --kv-page-len > 0")
+        from repro.serve import (
+            SLO,
+            LoadGenConfig,
+            Phase,
+            SLOScheduler,
+            generate,
+        )
+
+        phases = tuple(
+            Phase(duration_s=float(d), rate_rps=float(r))
+            for d, r in (p.split(":") for p in args.lg_phases.split(","))
+        )
+        prompt_lens = tuple(
+            int(x) for x in args.lg_prompt_lens.split(",")
+        )
+        gen_lens = tuple(int(x) for x in args.lg_gen_lens.split(","))
+        lg_cfg = LoadGenConfig(
+            seed=args.lg_seed,
+            phases=phases,
+            prompt_lens=prompt_lens,
+            prompt_mix=(1.0,) * len(prompt_lens),
+            gen_lens=gen_lens,
+            gen_mix=(1.0,) * len(gen_lens),
+            shared_prefix_len=args.shared_prefix_len,
+            shared_frac=args.lg_shared_frac,
+            vocab_size=cfg.vocab_size,
+        )
+        offered = generate(lg_cfg)
+        with ServeSession(
+            cfg,
+            mesh,
+            slots=args.batch,
+            max_len=args.prompt_len + args.gen,
+            kv_kind=args.kv_kind,
+            page_len=args.kv_page_len,
+            hot_pages=args.hot_pages,
+            distance=distance,
+            seed=args.seed,
+            spill_dir=args.spill_dir,
+            param_kind=args.param_kind,
+            device_budget_mb=args.device_budget_mb,
+            param_cache_mb=args.param_cache_mb,
+            expert_stream=args.expert_stream,
+            prefix_sharing=not args.no_prefix_sharing,
+        ) as session:
+            sched = SLOScheduler(
+                session,
+                offered,
+                slo=SLO(
+                    ttft_s=args.slo_ttft_ms / 1e3,
+                    tpot_s=args.slo_tpot_ms / 1e3,
+                ),
+                max_queue=args.max_queue,
+                virtual_step_s=(
+                    args.virtual_step_ms / 1e3
+                    if args.virtual_step_ms > 0
+                    else None
+                ),
+            )
+            rep = sched.run()
+        print(
+            f"loadgen {args.arch}: offered {rep['offered']}, completed "
+            f"{rep['completed']} ({rep['rejected_oversize']} oversize, "
+            f"{rep['rejected_overload']} overload) over "
+            f"{rep['makespan_s']:.2f} s"
+        )
+        print(
+            f"SLO: attainment {rep['slo_attainment']*100:.1f}%, goodput "
+            f"{rep['goodput_rps']:.2f} req/s / "
+            f"{rep['goodput_tokens_per_s']:.1f} tok/s under SLO, TTFT p50 "
+            f"{rep['ttft_s']['p50']*1e3:.1f} ms p99 "
+            f"{rep['ttft_s']['p99']*1e3:.1f} ms, TPOT p50 "
+            f"{rep['tpot_s']['p50']*1e3:.1f} ms"
+        )
+        print(
+            f"sharing: {rep['shared_hits']} shared-page fetch hits, "
+            f"{rep['shared_skipped_writebacks']} skipped writebacks, "
+            f"{rep['unique_group_fetches']} unique fetches, "
+            f"{rep['disk_requests']} disk req, prefill compiles "
+            f"{rep['prefill_compiles']}"
+        )
+        return 0
     res = serve(
         cfg,
         mesh,
@@ -1225,6 +1425,8 @@ def main() -> int:
         device_budget_mb=args.device_budget_mb,
         param_cache_mb=args.param_cache_mb,
         expert_stream=args.expert_stream,
+        prefix_sharing=not args.no_prefix_sharing,
+        shared_prefix_len=args.shared_prefix_len,
     )
     stats = res["stats"]
     print(

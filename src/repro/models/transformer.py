@@ -448,10 +448,16 @@ def forward_hidden(
 
 
 def prefill(
-    cfg: ModelConfig, params: Params, batch: dict, caches: Params, mesh=None, sharder=None
+    cfg: ModelConfig, params: Params, batch: dict, caches: Params, mesh=None, sharder=None,
+    last_pos=None,
 ) -> tuple[jax.Array, Params]:
     """Full-sequence forward that also fills decode state.  Returns
-    (last-position logits, caches)."""
+    (last-position logits, caches).
+
+    ``last_pos`` (traced int32 scalar): position whose logits to return —
+    the last *real* prompt token when the prompt is right-padded into a
+    length bucket (the serve path's bounded-compile prefill).  ``None``
+    keeps the static last position (exact-length prompts)."""
     x = _embed(cfg, params, batch)
     if sharder is not None:
         x = sharder.acts(x)
@@ -522,7 +528,11 @@ def prefill(
             if sharder is not None:
                 x = sharder.acts(x)
             new_caches[name] = st
-    logits = _head(cfg, params, x[:, -1:])
+    if last_pos is None:
+        xl = x[:, -1:]
+    else:
+        xl = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+    logits = _head(cfg, params, xl)
     return logits, new_caches
 
 

@@ -1,0 +1,20 @@
+"""Production serve front end: traffic generation and SLO scheduling.
+
+The paper's runtime serves "data sets of arbitrarily large size" from tiny
+device memories; this package supplies the traffic side of that claim — an
+open-loop load generator (:mod:`repro.serve.loadgen`) and an
+admission-controlled scheduler with per-request latency SLOs
+(:mod:`repro.serve.scheduler`) driving the paged
+:class:`~repro.launch.serve.ServeSession`.
+"""
+from repro.serve.loadgen import LoadGenConfig, OfferedRequest, Phase, generate
+from repro.serve.scheduler import SLO, SLOScheduler
+
+__all__ = [
+    "LoadGenConfig",
+    "OfferedRequest",
+    "Phase",
+    "generate",
+    "SLO",
+    "SLOScheduler",
+]

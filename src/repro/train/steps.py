@@ -1080,8 +1080,9 @@ def make_weight_streamed_prefill_step(
         return transformer.block_group_prefill(cfg, merged, cache, x, angles, sharder)
 
     @jax.jit
-    def head_fwd(group, x):
-        return transformer.head_stage_logits(cfg, group, x[:, -1:])
+    def head_fwd(group, x, last_pos):
+        xl = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+        return transformer.head_stage_logits(cfg, group, xl)
 
     @jax.jit
     def concat0(slices):
@@ -1102,7 +1103,7 @@ def make_weight_streamed_prefill_step(
             box["parts"] = []
             return box["x"]
         if i == head_idx:
-            box["logits"] = head_fwd(group, box["x"])
+            box["logits"] = head_fwd(group, box["x"], box["last_pos"])
             return box["logits"]
         u_i, last = unit_pos[i]
         box["parts"].append(group)
@@ -1121,9 +1122,16 @@ def make_weight_streamed_prefill_step(
     ex = HostStreamExecutor(apply, indexed=True, engine=engine)
     sh_fwd = plan.group_shardings(param_shardings)
 
-    def prefill(home, batch):
+    def prefill(home, batch, last_pos=None):
         box.clear()
         box["batch"] = batch
+        if last_pos is None:
+            # static last position == the batch's sequence length - 1
+            # (exact-length prompts; bitwise-identical to the x[:, -1:]
+            # slice this path used before bucketed prefill existed)
+            seq = jax.tree.leaves(batch)[0].shape[-1]
+            last_pos = jnp.asarray(seq - 1, jnp.int32)
+        box["last_pos"] = last_pos
         groups = (
             plan.fetch_thunks_forward(home, residency)
             if residency is not None
@@ -1404,11 +1412,18 @@ def make_prefill_step(
 
     Caches are created inside the step (zeros) so the step's out-shardings
     place them; context length is the shape's ``seq_len``.
+
+    ``last_pos`` (optional traced int32 scalar): the last *real* prompt
+    position when the batch is right-padded into a length bucket — the
+    serve path's bounded-compile prefill returns that position's logits
+    instead of the pad tail's.
     """
 
-    def prefill_step(params, batch):
+    def prefill_step(params, batch, last_pos=None):
         caches = transformer.init_caches(cfg, batch_size, seq_len, cfg.compute_dtype)
-        return transformer.prefill(cfg, params, batch, caches, mesh, sharder)
+        return transformer.prefill(
+            cfg, params, batch, caches, mesh, sharder, last_pos=last_pos
+        )
 
     return prefill_step
 
